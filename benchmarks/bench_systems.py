@@ -1,0 +1,92 @@
+"""Paper Fig. 5 (encode/decode wall-clock) + Fig. 7 (rank(S)) + kernel
+micro-benchmarks (FWHT pallas-vs-oracle) + framework-scale chunked DME."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EstimatorSpec
+from repro.core import beta as beta_lib
+from repro.core.estimators import base as est_base
+from repro.kernels import ops as kops
+
+from .common import rows, timed
+
+
+def walltime(out, n=10, k=102, d=1024):
+    """Fig. 5: per-client encode time and server decode time."""
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.standard_normal((n, 1, d)), jnp.float32)
+    key = jax.random.key(0)
+    for name, kw in [
+        ("rand_k", {}), ("rand_k_spatial", {"transform": "avg"}),
+        ("rand_proj_spatial", {"transform": "avg"}),
+        ("top_k", {}), ("wangni", {}), ("induced", {}),
+    ]:
+        spec = EstimatorSpec(name=name, k=k, d_block=d, **kw)
+        enc = jax.jit(lambda key, x: est_base.encode(spec, key, 0, x))
+        sec_e, payload0 = timed(enc, key, xs[0])
+        payloads = jax.jit(lambda key, xs: est_base.encode_all(spec, key, xs))(key, xs)
+        dec = jax.jit(lambda key, p: est_base.decode(spec, key, p, n))
+        sec_d, _ = timed(dec, key, payloads)
+        rows(out, f"fig5/encode/n{n}_k{k}/{name}", sec_e * 1e6, "per-client")
+        rows(out, f"fig5/decode/n{n}_k{k}/{name}", sec_d * 1e6, "server")
+
+
+def rank_s(out, trials=200):
+    """Fig. 7: rank(S) == nk w.h.p. for SRHT."""
+    for d, nk_pairs in [(256, [(8, 16)]), (1024, [(8, 64), (16, 32)])]:
+        for n, k in nk_pairs:
+            bank = beta_lib.srht_eig_bank(n, k, d, trials=trials, seed=11)
+            frac = ((np.asarray(bank) > 1e-4).sum(1) == n * k).mean()
+            rows(out, f"fig7/rank_full_frac/d{d}_nk{n*k}", 0, f"{frac:.4f}")
+
+
+def fwht_kernel(out):
+    """Pallas (interpret) vs jnp-oracle FWHT; correctness is tested in
+    tests/test_kernels.py — here we record throughput shape-sweep."""
+    rng = np.random.default_rng(1)
+    for d in (512, 1024, 4096):
+        x = jnp.asarray(rng.standard_normal((256, d)), jnp.float32)
+        sec_ref, _ = timed(jax.jit(lambda t: kops.fwht(t, use_pallas="never")), x)
+        rows(out, f"kernel/fwht_oracle/d{d}", sec_ref * 1e6,
+             f"{256 * d * np.log2(d) / sec_ref / 1e9:.2f}GOPs")
+        sec_pl, _ = timed(jax.jit(lambda t: kops.fwht(t, use_pallas="force")), x)
+        rows(out, f"kernel/fwht_pallas_interp/d{d}", sec_pl * 1e6, "interpret-mode")
+
+
+def chunked_scale(out):
+    """Framework-scale: DME over a 4M-dim gradient, shared-randomness Gram
+    decode (one eigh for all chunks) vs paper-faithful per-chunk decode."""
+    n, k, d = 8, 64, 1024
+    d_flat = 1 << 22  # 4.2M
+    c = d_flat // d
+    rng = np.random.default_rng(2)
+    base = rng.standard_normal(d_flat).astype(np.float32)
+    xs = jnp.asarray(
+        np.stack([base + 0.1 * rng.standard_normal(d_flat) for _ in range(n)])
+    ).reshape(n, c, d)
+    key = jax.random.key(3)
+    for shared, label in [(True, "shared_gram"), (False, "per_chunk_paper")]:
+        spec = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=d,
+                             transform="avg", shared_randomness=shared)
+        if not shared:
+            xs_small = xs[:, :32]  # paper-faithful path is O(C) eighs; sample
+            fn = jax.jit(lambda key, t: est_base.decode(
+                spec, key, est_base.encode_all(spec, key, t), n))
+            sec, _ = timed(fn, key, xs_small)
+            sec = sec * (c / 32)
+        else:
+            fn = jax.jit(lambda key, t: est_base.decode(
+                spec, key, est_base.encode_all(spec, key, t), n))
+            sec, _ = timed(fn, key, xs)
+        rows(out, f"scale/dme_4M_roundtrip/{label}", sec * 1e6,
+             f"{d_flat / sec / 1e6:.1f} Mcoord/s")
+
+
+def run(out):
+    walltime(out)
+    rank_s(out)
+    fwht_kernel(out)
+    chunked_scale(out)

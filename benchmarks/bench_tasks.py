@@ -1,0 +1,143 @@
+"""Paper Fig. 4: distributed power iteration, distributed k-means,
+distributed linear regression — synthetic stand-ins for Fashion-MNIST /
+UJIndoor (offline container; same d, n, k regimes, IID + non-IID splits)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EstimatorSpec, correlation, mean_estimate
+
+from .common import rows, timed
+
+ESTIMATORS = [
+    ("rand_k", dict()),
+    ("rand_k_spatial", dict(transform="avg")),
+    ("rand_proj_spatial", dict(transform="avg")),
+    ("wangni", dict()),
+    ("induced", dict()),
+]
+
+
+def _image_like_data(n_samples, d, seed=0, non_iid=False, n_clients=10):
+    """Low-rank + structured noise, Fashion-MNIST-like second moment."""
+    rng = np.random.default_rng(seed)
+    rank = 16
+    basis = rng.standard_normal((rank, d)) * (1.0 / np.sqrt(d))
+    scale = np.geomspace(3.0, 0.3, rank)[:, None]
+    z = rng.standard_normal((n_samples, rank))
+    labels = rng.integers(0, 10, n_samples)
+    cls_shift = rng.standard_normal((10, d)) * 0.4 / np.sqrt(d)
+    x = z @ (basis * scale) + cls_shift[labels] + rng.standard_normal((n_samples, d)) * 0.05
+    if non_iid:
+        order = np.argsort(labels)  # label-sorted shards (paper App. D)
+        x, labels = x[order], labels[order]
+    return x.astype(np.float32), labels
+
+
+def _split(x, n_clients):
+    per = x.shape[0] // n_clients
+    return np.stack([x[i * per:(i + 1) * per] for i in range(n_clients)])
+
+
+def power_iteration(out, n=10, k=102, d=1024, iters=15, non_iid=False):
+    x, _ = _image_like_data(4000, d, non_iid=non_iid, n_clients=n)
+    shards = jnp.asarray(_split(x, n))  # (n, m, d)
+    cov = x.T @ x / x.shape[0]
+    v_top = np.linalg.eigh(cov)[1][:, -1]
+    tag = "noniid" if non_iid else "iid"
+
+    for name, kw in ESTIMATORS + [("identity", {})]:
+        spec = EstimatorSpec(name=name, k=k, d_block=d, **kw)
+
+        @jax.jit
+        def one_round(v, key):
+            local = jnp.einsum("nmd,d->nm", shards, v)
+            vi = jnp.einsum("nmd,nm->nd", shards, local)
+            vi = vi / (jnp.linalg.norm(vi, axis=1, keepdims=True) + 1e-9)
+            vh = mean_estimate(spec, key, vi[:, None, :])[0]
+            return vh / (jnp.linalg.norm(vh) + 1e-9)
+
+        def run():
+            v = jnp.ones(d) / jnp.sqrt(d)
+            for t in range(iters):
+                v = one_round(v, jax.random.fold_in(jax.random.key(7), t))
+            return v
+
+        sec, v = timed(run, warmup=0, iters=1)
+        err = min(float(jnp.linalg.norm(v - v_top)), float(jnp.linalg.norm(v + v_top)))
+        rows(out, f"fig4/power_iter_{tag}/n{n}_k{k}/{name}", sec / iters * 1e6, f"{err:.4f}")
+
+
+def kmeans(out, n=10, k=102, d=1024, iters=10, n_clusters=10, non_iid=False):
+    x, _ = _image_like_data(4000, d, seed=2, non_iid=non_iid, n_clients=n)
+    shards = jnp.asarray(_split(x, n))
+    tag = "noniid" if non_iid else "iid"
+    init = jnp.asarray(x[:: x.shape[0] // n_clusters][:n_clusters])
+
+    for name, kw in ESTIMATORS + [("identity", {})]:
+        spec = EstimatorSpec(name=name, k=k, d_block=d, **kw)
+
+        @jax.jit
+        def one_round(cents, key):
+            d2 = ((shards[:, :, None, :] - cents[None, None]) ** 2).sum(-1)
+            assign = jnp.argmin(d2, -1)  # (n, m)
+            oh = jax.nn.one_hot(assign, n_clusters, dtype=jnp.float32)
+            sums = jnp.einsum("nmc,nmd->ncd", oh, shards)
+            cnts = oh.sum(1)[..., None]
+            local = sums / jnp.maximum(cnts, 1.0)  # (n, c, d) local centroids
+            est = mean_estimate(spec, key, local)  # chunks axis = clusters
+            loss = (d2.min(-1)).mean()
+            return est, loss
+
+        def run():
+            cents, loss = init, 0.0
+            for t in range(iters):
+                cents, loss = one_round(cents, jax.random.fold_in(jax.random.key(8), t))
+            return loss
+
+        sec, loss = timed(run, warmup=0, iters=1)
+        rows(out, f"fig4/kmeans_{tag}/n{n}_k{k}/{name}", sec / iters * 1e6, f"{float(loss):.4f}")
+
+
+def linreg(out, n=10, k=51, d=512, iters=30, lr=0.05, non_iid=False):
+    rng = np.random.default_rng(3)
+    w_star = rng.standard_normal(d).astype(np.float32) / np.sqrt(d)
+    x, _ = _image_like_data(4000, d, seed=4, non_iid=non_iid, n_clients=n)
+    y = x @ w_star + rng.standard_normal(x.shape[0]).astype(np.float32) * 0.01
+    if non_iid:
+        order = np.argsort(y)
+        x, y = x[order], y[order]
+    xs, ys = jnp.asarray(_split(x, n)), jnp.asarray(_split(y[:, None], n)[..., 0])
+    tag = "noniid" if non_iid else "iid"
+
+    for name, kw in ESTIMATORS + [("identity", {})]:
+        spec = EstimatorSpec(name=name, k=k, d_block=d, **kw)
+
+        @jax.jit
+        def one_round(w, key):
+            pred = jnp.einsum("nmd,d->nm", xs, w)
+            grad_i = 2 * jnp.einsum("nmd,nm->nd", xs, pred - ys) / xs.shape[1]
+            g = mean_estimate(spec, key, grad_i[:, None, :])[0]
+            w = w - lr * g
+            loss = ((pred - ys) ** 2).mean()
+            return w, loss
+
+        def run():
+            w, loss = jnp.zeros(d), 0.0
+            for t in range(iters):
+                w, loss = one_round(w, jax.random.fold_in(jax.random.key(9), t))
+            return loss
+
+        sec, loss = timed(run, warmup=0, iters=1)
+        rows(out, f"fig4/linreg_{tag}/n{n}_k{k}/{name}", sec / iters * 1e6, f"{float(loss):.5f}")
+
+
+def run(out):
+    power_iteration(out, non_iid=False)
+    kmeans(out, non_iid=False)
+    linreg(out, non_iid=False)
+    # App. D.1 non-IID variants
+    power_iteration(out, non_iid=True)
+    linreg(out, non_iid=True)

@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: timing + the paper's simulation setups."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EstimatorSpec, correlation, mean_estimate
+
+
+def timed(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters, out
+
+
+def mse_over_trials(spec: EstimatorSpec, xs, trials: int, seed: int = 0):
+    """Mean squared error E||x_hat - x_bar||^2 over `trials` rounds, timed."""
+    xbar = jnp.mean(xs, axis=0)
+
+    @jax.jit
+    def one(key):
+        return correlation.mse(mean_estimate(spec, key, xs), xbar)
+
+    keys = jax.random.split(jax.random.key(seed), trials)
+    secs, mses = timed(lambda: jax.lax.map(one, keys))
+    return float(jnp.mean(mses)), secs / trials
+
+
+def base_vector_clients(n: int, d: int, n_groups: int, seed: int = 0):
+    """Paper §4.3 setup: clients hold canonical basis vectors; #clients per
+    group controls R. Returns (xs (n,1,d), R)."""
+    rng = np.random.default_rng(seed)
+    assign = rng.integers(0, n_groups, n)
+    xs = np.eye(d)[assign][:, None, :].astype(np.float32)
+    xs_j = jnp.asarray(xs)
+    return xs_j, float(correlation.r_exact(xs_j))
+
+
+def rows(out_list, name, us, derived):
+    out_list.append(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,121 @@
+"""First-order fusion-aware HBM-traffic model (per device, per step).
+
+XLA's cost_analysis 'bytes accessed' charges every HLO op's operands and
+results as if nothing fuses — a per-op UPPER bound that lands ~5-10x above
+real TPU HBM traffic for transformer steps (measured arithmetic intensity
+~12 flop/byte, vs >100 for fused bf16 stacks). For bottleneck
+classification and the roofline fraction we therefore model traffic at
+fusion granularity: each MAJOR tensor (weights, layer activations,
+attention scores, MoE buffers, SSD chunk tensors, KV cache) is charged once
+per producing/consuming fusion, with a x3 fwd/remat/bwd multiplier for
+training. Both numbers are reported side by side in EXPERIMENTS.md.
+
+Key term this model exposes (and the flash-attention kernel removes): the
+materialised attention score tensor, tokens*S*heads_local*4B per layer —
+XLA cannot keep it in VMEM across the matmul->softmax->matmul boundary.
+"""
+from __future__ import annotations
+
+from repro import configs
+from repro.launch.specs import SHAPES
+
+BF16 = 2
+F32 = 4
+
+
+def _shards(n, ways):
+    return n // ways if ways and n % ways == 0 else n
+
+
+def analytic_memory_bytes(arch: str, shape_name: str, *, data=16, model=16, pod=1,
+                          flash_attention=False, kv_block=None) -> dict:
+    cfg = configs.get_config(arch)
+    info = SHAPES[shape_name]
+    kind = info["kind"]
+    chips = data * model * pod
+    dp = data * pod
+    b, s = info["batch"], info["seq"]
+    ms = model
+    kv_block = kv_block or cfg.attn_kv_block
+
+    if kind == "train":
+        tokens = b * s // dp
+        train_mult = 3.0  # fwd + remat-fwd + bwd passes over activations/weights
+    elif kind == "prefill":
+        tokens = max(b // dp, 1) * s
+        train_mult = 1.0
+    else:
+        tokens = max(b // dp, 1)
+        train_mult = 1.0
+
+    d = cfg.d_model
+    weights = 0.0   # bytes of weights streamed per pass (bf16, TP-sharded)
+    acts = 0.0      # major activation tensors, read+write once each
+    scores = 0.0    # attention score matrices (the flash-kernel target)
+    cache_rw = 0.0  # decode KV-cache reads
+
+    for spec in cfg.layers:
+        if spec.kind == "attn":
+            h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+            wq = d * h * dh + 2 * d * kv * dh + h * dh * d
+            weights += BF16 * wq / ms
+            heads_local = _shards(h * dh, ms) // dh or 1
+            # x, norm, q/k/v/o projections in+out
+            acts += tokens * BF16 * (6 * d + 2 * (h * dh + 2 * kv * dh) / ms)
+            if kind == "decode":
+                s_ctx = min(s, spec.window) if spec.window else s
+                # read the whole (sharded) cache to score one token
+                cache_rw += (b // dp if b >= dp else b) * s_ctx * kv * dh * 2 * BF16 / (
+                    1 if b >= dp else chips // 1)
+                scores += tokens * s_ctx * heads_local * F32 * 2
+            else:
+                s_ctx = min(s, spec.window) if spec.window else s
+                if flash_attention:
+                    # VMEM-resident tiles: KV re-read once per query tile
+                    n_qtiles = max(tokens // kv_block, 1)
+                    acts += n_qtiles * s_ctx * kv * dh * 2 * BF16
+                else:
+                    # scores hit HBM at the matmul->softmax->matmul boundary
+                    scores += tokens * s_ctx * heads_local * F32 * 2
+        else:
+            di, nh, hd = cfg.mamba_d_inner, cfg.mamba_heads, cfg.mamba_headdim
+            n_state, q = cfg.d_state, cfg.mamba_chunk
+            p_in = 2 * di + 2 * cfg.mamba_ngroups * n_state + nh
+            weights += BF16 * (d * p_in + di * d) / (ms if p_in % ms == 0 else 1)
+            acts += tokens * BF16 * (6 * d + 2 * p_in)
+            if kind != "decode":
+                # SSD decay/score chunk tensors (b, nc, h, q, q) hit HBM
+                scores += tokens * q * nh * F32 * 2
+                acts += tokens * (nh * n_state) * F32  # states
+            else:
+                cache_rw += nh * n_state * hd * F32 * 2 * max(b // dp, 1)
+
+        if spec.ffn == "dense":
+            weights += BF16 * 3 * d * cfg.d_ff / ms
+            acts += tokens * BF16 * (4 * d + 3 * cfg.d_ff / ms)
+        elif spec.ffn == "moe":
+            e, fe, topk = cfg.n_experts, cfg.d_ff_expert, cfg.top_k_experts
+            weights += BF16 * 3 * e * d * fe / ms
+            # dispatch buffers (E, C, d) in + out and expert hiddens
+            cap_tokens = tokens * topk * cfg.capacity_factor
+            acts += cap_tokens * BF16 * (4 * d + 3 * fe / ms)
+            if cfg.n_shared_experts:
+                fs = cfg.n_shared_experts * fe
+                weights += BF16 * 3 * d * fs / ms
+                acts += tokens * BF16 * 3 * fs / ms
+
+    # embeddings + lm head
+    weights += BF16 * cfg.vocab_padded * d / ms * (1 if kind != "train" else 2)
+    acts += tokens * F32 * cfg.vocab_padded / ms  # logits
+    total = train_mult * (weights + acts + scores) + cache_rw
+    if kind == "train":
+        # optimizer: read+write p (f32), m, v + grad read on the FSDP shard
+        n = cfg.n_params()
+        total += 8 * F32 * n / chips
+    return {
+        "total": total,
+        "weights": train_mult * weights,
+        "acts": train_mult * acts,
+        "scores": train_mult * scores,
+        "cache": cache_rw,
+    }

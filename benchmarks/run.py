@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only mse,tasks,systems,roofline]
+
+Prints ``name,us_per_call,derived`` CSV (and tees a copy to
+results/bench_output.csv).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="mse,tasks,systems,roofline")
+    args = ap.parse_args()
+    sections = set(args.only.split(","))
+
+    out: list[str] = ["name,us_per_call,derived"]
+    t0 = time.time()
+    if "mse" in sections:
+        from . import bench_mse
+
+        bench_mse.run(out)
+    if "tasks" in sections:
+        from . import bench_tasks
+
+        bench_tasks.run(out)
+    if "systems" in sections:
+        from . import bench_systems
+
+        bench_systems.run(out)
+    if "roofline" in sections:
+        from . import roofline
+
+        roofline.run(out)
+
+    print("\n".join(out))
+    os.makedirs(os.path.join(os.path.dirname(__file__), "..", "results"), exist_ok=True)
+    with open(os.path.join(os.path.dirname(__file__), "..", "results", "bench_output.csv"), "w") as f:
+        f.write("\n".join(out) + "\n")
+    print(f"# total {time.time()-t0:.1f}s, {len(out)-1} rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Quickstart: correlation-aware sparsified mean estimation in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Eight clients hold correlated 1024-dim vectors; each may send only k=64
+numbers. Rand-Proj-Spatial (this paper) beats Rand-k and Rand-k-Spatial by
+using SRHT projections + correlation-aware spectral decoding.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EstimatorSpec, correlation, mean_estimate
+
+n, d, k = 8, 1024, 64
+rng = np.random.default_rng(0)
+shared = rng.standard_normal(d)
+xs = jnp.asarray(
+    np.stack([shared + 0.3 * rng.standard_normal(d) for _ in range(n)])[:, None, :],
+    jnp.float32,
+)  # (n, chunks=1, d): highly correlated clients
+xbar = jnp.mean(xs, axis=0)
+r = float(correlation.r_exact(xs))
+print(f"n={n} d={d} k={k}  (compression {d // k}x)  correlation R={r:.2f} of max {n - 1}")
+
+for name, kwargs in [
+    ("rand_k", {}),
+    ("rand_k_spatial", dict(transform="avg")),
+    ("rand_proj_spatial", dict(transform="avg")),
+    ("rand_proj_spatial", dict(transform="opt", r_mode="est")),  # online R-hat (ours)
+]:
+    spec = EstimatorSpec(name=name, k=k, d_block=d, **kwargs)
+    fn = jax.jit(lambda key: correlation.mse(mean_estimate(spec, key, xs), xbar))
+    mses = jax.lax.map(fn, jax.random.split(jax.random.key(1), 100))
+    label = name + ("(" + kwargs.get("transform", "") + ("/est" if kwargs.get("r_mode") == "est" else "") + ")")
+    print(f"  {label:38s} MSE = {float(jnp.mean(mses)):.4f}")

@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch import serve
+
+argv = sys.argv[1:] or [
+    "--arch", "gemma3-4b", "--preset", "tiny",
+    "--batch", "4", "--prompt-len", "32", "--gen", "16",
+]
+serve.main(argv)
+print("OK: batched prefill+decode served.")

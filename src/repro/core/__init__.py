@@ -1,0 +1,16 @@
+"""The paper's contribution: correlation-aware sparsified mean estimation.
+
+Public surface:
+    EstimatorSpec, mean_estimate, encode, decode  — the DME codec family
+    chunking                                      — framework-scale blockwise application
+    correlation.r_exact                           — paper Eq. 7
+"""
+from . import beta, chunking, correlation, transforms  # noqa: F401
+from .estimators import (  # noqa: F401
+    EstimatorSpec,
+    decode,
+    encode,
+    encode_all,
+    mean_estimate,
+    names,
+)

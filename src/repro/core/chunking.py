@@ -1,0 +1,51 @@
+"""Blockwise application of DME estimators to framework-scale vectors.
+
+The paper analyses a single d-dimensional vector; a model gradient has
+d ~ 1e9. We flatten the gradient pytree, zero-pad to a multiple of
+``d_block`` (a power of two, so SRHT applies per block), and run the
+estimator vmapped/batched over chunks. All of the paper's per-vector
+guarantees (unbiasedness, MSE) hold per chunk; MSE adds across chunks.
+See DESIGN.md §3.1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+def num_chunks(d_flat: int, d_block: int) -> int:
+    return -(-d_flat // d_block)
+
+
+def chunk(x: jnp.ndarray, d_block: int) -> jnp.ndarray:
+    """(d_flat,) -> (C, d_block), zero-padding the tail."""
+    (d_flat,) = x.shape
+    c = num_chunks(d_flat, d_block)
+    pad = c * d_block - d_flat
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x.reshape(c, d_block)
+
+
+def unchunk(xc: jnp.ndarray, d_flat: int) -> jnp.ndarray:
+    """(C, d_block) -> (d_flat,), dropping pad."""
+    return xc.reshape(-1)[:d_flat]
+
+
+def flatten_tree(tree):
+    """pytree -> (flat (d,), unravel_fn). Thin wrapper for a stable import point."""
+    flat, unravel = ravel_pytree(tree)
+    return flat, unravel
+
+
+def tree_chunk(tree, d_block: int):
+    """pytree -> ((C, d_block) chunks, restore_fn)."""
+    flat, unravel = ravel_pytree(tree)
+    d_flat = flat.shape[0]
+    xc = chunk(flat, d_block)
+
+    def restore(xc_hat: jnp.ndarray):
+        return unravel(unchunk(xc_hat, d_flat))
+
+    return xc, restore

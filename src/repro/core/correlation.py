@@ -1,0 +1,20 @@
+"""Cross-client correlation measure R (paper Eq. 7) and helpers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def r_exact(xs: jnp.ndarray) -> jnp.ndarray:
+    """R = sum_{i != l} <x_i, x_l> / sum_i ||x_i||^2 for xs (n, ..., d).
+
+    Chunk axes are flattened into the inner product (R of the full vectors).
+    """
+    n = xs.shape[0]
+    flat = xs.reshape(n, -1).astype(jnp.float32)
+    total = jnp.sum(flat, axis=0)
+    sq = jnp.sum(flat * flat)
+    return (jnp.dot(total, total) - sq) / (sq + 1e-12)
+
+
+def mse(x_hat: jnp.ndarray, x_bar: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((x_hat.astype(jnp.float32) - x_bar.astype(jnp.float32)) ** 2)

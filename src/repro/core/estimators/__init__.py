@@ -1,0 +1,13 @@
+"""Estimator registry. Importing this package registers all codecs."""
+from . import identity, induced, rand_k, rand_k_spatial, rand_proj_spatial, top_k, wangni  # noqa: F401
+from .base import (  # noqa: F401
+    Codec,
+    EstimatorSpec,
+    decode,
+    encode,
+    encode_all,
+    get,
+    mean_estimate,
+    names,
+    register,
+)

@@ -1,0 +1,157 @@
+"""Estimator spec + registry.
+
+Every estimator is a pair of pure functions
+
+    encode(spec, key, client_id, x_cd)   : (C, d) -> payload pytree
+    decode(spec, key, payloads, n)       : stacked payloads (leading n) -> (C, d)
+
+- ``key`` is the *round* key, shared by every client and the server
+  (deterministic shared randomness: per-client randomness is re-derived as
+  fold_in(key, client_id), so index/sign/seed information is never
+  transmitted — see DESIGN.md §3.6).
+- Payloads are pytrees of arrays with identical structure across clients, so
+  they stack/all-gather cleanly.
+- ``mean_estimate`` is the one-shot convenience used by benchmarks/tests and
+  by the paper-style DME drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimatorSpec:
+    name: str = "rand_proj_spatial"
+    k: int = 64                      # per-client per-chunk budget
+    d_block: int = 1024              # chunk size (power of two)
+    transform: str = "avg"           # spatial family: one|max|avg|opt
+    r_value: float | None = None     # oracle R for transform="opt", r_mode="fixed"
+    r_mode: str = "fixed"            # fixed | est (online R-hat from payloads)
+    shared_randomness: bool = True   # same G_i for all chunks of a round (fast path)
+    decode_method: str = "gram"      # gram | direct (paper-literal d x d eigh)
+    projection: str = "srht"         # srht | subsample (Lemma 4.1) | gauss
+    beta_trials: int | None = None   # None -> adaptive default
+    use_pallas: str = "auto"         # auto | force | never
+    wangni_capacity: float = 1.5     # payload capacity multiplier (see wangni.py)
+    induced_topk_frac: float = 0.5   # budget split for the induced compressor
+    ef: bool = False                 # error-feedback residual (train-loop level)
+    # payload quantization (paper §7 future work: sparsification x quantization):
+    # float32 | bfloat16 | int8. int8 uses per-chunk scales + STOCHASTIC
+    # rounding, so the composed estimator stays unbiased (tested).
+    payload_dtype: str = "float32"
+
+    def replace(self, **kw) -> "EstimatorSpec":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    encode: Callable[..., Any]
+    decode: Callable[..., Any]
+    # self_decode(spec, key, client_id, payload) -> (C, d): the client's own
+    # reconstruction of what the server received from it — used by error
+    # feedback (residual = input - self_decode). Only meaningful for (semi-)
+    # biased codecs (top_k, wangni, induced).
+    self_decode: Callable[..., Any] | None = None
+    bits_per_client: Callable[[EstimatorSpec, int], int] | None = None
+
+
+_REGISTRY: dict[str, Codec] = {}
+
+
+def register(name: str, codec: Codec) -> None:
+    _REGISTRY[name] = codec
+
+
+def get(name: str) -> Codec:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown estimator {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def client_key(key, client_id):
+    return jax.random.fold_in(key, client_id)
+
+
+def chunk_key(ckey, chunk_id):
+    return jax.random.fold_in(ckey, chunk_id)
+
+
+_VAL_KEYS = ("vals", "top_vals", "rand_vals")
+_VAL_SALT = {"vals": 101, "top_vals": 211, "rand_vals": 307}  # stable fold_in tags
+
+
+def _quantize_payload(spec: EstimatorSpec, key, payload: dict) -> dict:
+    if spec.payload_dtype == "float32":
+        return payload
+    out = {}
+    for name, v in payload.items():
+        if name not in _VAL_KEYS:
+            out[name] = v
+            continue
+        if spec.payload_dtype == "bfloat16":
+            out[name] = v.astype(jnp.bfloat16)
+        elif spec.payload_dtype == "int8":
+            scale = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0 + 1e-12
+            u = jax.random.uniform(jax.random.fold_in(key, _VAL_SALT[name]), v.shape)
+            q = jnp.floor(v / scale + u)  # stochastic rounding: E[q*scale] = v
+            out[name] = jnp.clip(q, -128, 127).astype(jnp.int8)
+            out[name + "_scale"] = scale.astype(jnp.float32)
+        else:
+            raise ValueError(spec.payload_dtype)
+    return out
+
+
+def _dequantize_payload(spec: EstimatorSpec, payload: dict) -> dict:
+    if spec.payload_dtype == "float32":
+        return payload
+    out = {}
+    for name, v in payload.items():
+        if name.endswith("_scale"):
+            continue
+        if name in _VAL_KEYS:
+            if spec.payload_dtype == "bfloat16":
+                out[name] = v.astype(jnp.float32)
+            else:
+                out[name] = v.astype(jnp.float32) * payload[name + "_scale"]
+        else:
+            out[name] = v
+    return out
+
+
+def encode(spec: EstimatorSpec, key, client_id, x_cd: jnp.ndarray):
+    payload = get(spec.name).encode(spec, key, client_id, x_cd)
+    return _quantize_payload(spec, client_key(key, client_id), payload)
+
+
+def decode(spec: EstimatorSpec, key, payloads, n: int) -> jnp.ndarray:
+    return get(spec.name).decode(spec, key, _dequantize_payload(spec, payloads), n)
+
+
+def self_decode(spec: EstimatorSpec, key, client_id, payload) -> jnp.ndarray:
+    codec = get(spec.name)
+    if codec.self_decode is None:
+        raise ValueError(f"estimator {spec.name!r} does not support error feedback")
+    return codec.self_decode(spec, key, client_id, _dequantize_payload(spec, payload))
+
+
+def encode_all(spec: EstimatorSpec, key, xs: jnp.ndarray):
+    """xs: (n, C, d) -> stacked payloads (leading n)."""
+    n = xs.shape[0]
+    ids = jnp.arange(n)
+    return jax.vmap(lambda i, x: encode(spec, key, i, x))(ids, xs)
+
+
+def mean_estimate(spec: EstimatorSpec, key, xs: jnp.ndarray) -> jnp.ndarray:
+    """One-shot DME: xs (n, C, d) client chunks -> (C, d) mean estimate."""
+    n = xs.shape[0]
+    payloads = encode_all(spec, key, xs)
+    return decode(spec, key, payloads, n)

@@ -1,0 +1,17 @@
+"""No-compression baseline: clients send full vectors, server averages."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import base
+
+
+def encode(spec, key, client_id, x_cd):
+    return {"vals": x_cd}
+
+
+def decode(spec, key, payloads, n):
+    return jnp.mean(payloads["vals"], axis=0)
+
+
+base.register("identity", base.Codec(encode=encode, decode=decode))

@@ -1,0 +1,52 @@
+"""Induced compressor (Horvath & Richtarik 2021) with Top-k1 + Rand-k2.
+
+C(x) = Top_{k1}(x) + RandK_{k2}(x - Top_{k1}(x)) * (d/k2)-scaled — unbiased,
+because the Rand-k stage is an unbiased estimator of the Top-k residual.
+Budget split k1 = round(induced_topk_frac * k), k2 = k - k1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import base, top_k
+
+
+def _split(spec):
+    k1 = max(1, int(round(spec.induced_topk_frac * spec.k)))
+    k1 = min(k1, spec.k - 1) if spec.k > 1 else 0
+    return k1, spec.k - k1
+
+
+def encode(spec, key, client_id, x_cd):
+    k1, k2 = _split(spec)
+    ckey = base.client_key(key, client_id)
+    c, d = x_cd.shape
+
+    _, tidx = jax.lax.top_k(jnp.abs(x_cd), max(k1, 1))
+    tvals = jnp.take_along_axis(x_cd, tidx, axis=-1)
+    if k1 == 0:
+        tvals = jnp.zeros((c, 1), x_cd.dtype)
+        tidx = jnp.zeros((c, 1), jnp.int32)
+    resid = x_cd.at[jnp.arange(c)[:, None], tidx].add(-tvals) if k1 > 0 else x_cd
+
+    keys = jax.vmap(base.chunk_key, in_axes=(None, 0))(ckey, jnp.arange(c))
+    ridx = jax.vmap(lambda kk: jax.random.permutation(kk, d)[:k2])(keys)
+    rvals = jnp.take_along_axis(resid, ridx, axis=-1)
+    return {
+        "top_vals": tvals,
+        "top_idx": tidx.astype(jnp.int32),
+        "rand_vals": rvals,
+        "rand_idx": ridx.astype(jnp.int32),
+    }
+
+
+def decode(spec, key, payloads, n):
+    k1, k2 = _split(spec)
+    d = spec.d_block
+    top = top_k.scatter_mean(payloads["top_vals"], payloads["top_idx"], n, d)
+    rand = top_k.scatter_mean(payloads["rand_vals"], payloads["rand_idx"], n, d)
+    return top + (d / k2) * rand
+
+
+base.register("induced", base.Codec(encode=encode, decode=decode))

@@ -1,0 +1,58 @@
+"""Rand-k sparsification (Konecny & Richtarik 2018) — the paper's baseline.
+
+Each client sends k of its d coordinates, chosen uniformly without
+replacement; indices are re-derived from the shared round key, so only the k
+values travel. Decode: x_hat = (1/n)(d/k) sum_i scatter(vals_i).
+MSE (paper Eq. 1): (1/n^2)(d/k - 1) sum_i ||x_i||^2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import base
+
+
+def _indices(spec: base.EstimatorSpec, key, client_id, n_chunks: int):
+    """(C, k) int32 coordinate choices for one client."""
+    ckey = base.client_key(key, client_id)
+    d, k = spec.d_block, spec.k
+    if spec.shared_randomness:
+        idx = jax.random.permutation(ckey, d)[:k]
+        return jnp.broadcast_to(idx, (n_chunks, k))
+    keys = jax.vmap(base.chunk_key, in_axes=(None, 0))(ckey, jnp.arange(n_chunks))
+    return jax.vmap(lambda kk: jax.random.permutation(kk, d)[:k])(keys)
+
+
+def encode(spec, key, client_id, x_cd):
+    c = x_cd.shape[0]
+    idx = _indices(spec, key, client_id, c)
+    vals = jnp.take_along_axis(x_cd, idx, axis=-1)
+    return {"vals": vals}
+
+
+def scatter_sum_and_counts(spec, key, vals, n):
+    """Common Rand-k / Rand-k-Spatial decode plumbing.
+
+    vals: (n, C, k) -> (sum (C, d), counts (C, d)) of scattered payloads.
+    """
+    c = vals.shape[1]
+    d = spec.d_block
+
+    def one(client_id, v):
+        idx = _indices(spec, key, client_id, c)
+        s = jnp.zeros((c, d), v.dtype).at[jnp.arange(c)[:, None], idx].add(v)
+        m = jnp.zeros((c, d), jnp.float32).at[jnp.arange(c)[:, None], idx].add(1.0)
+        return s, m
+
+    ss, ms = jax.vmap(one)(jnp.arange(n), vals)
+    return ss.sum(0), ms.sum(0)
+
+
+def decode(spec, key, payloads, n):
+    s, _ = scatter_sum_and_counts(spec, key, payloads["vals"], n)
+    return (spec.d_block / (spec.k * n)) * s
+
+
+CODEC = base.Codec(encode=encode, decode=decode)
+base.register("rand_k", CODEC)

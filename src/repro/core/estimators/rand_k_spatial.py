@@ -1,0 +1,51 @@
+"""Rand-k-Spatial family (Jhunjhunwala et al. 2021) — paper Eq. 2/3.
+
+Encoding is identical to Rand-k. The server scales coordinate j by
+beta / T(M_j), where M_j is the number of clients that sent coordinate j and
+T(m) = 1 + rho (m-1) interpolates with the degree of correlation.
+beta is exact (binomial expectation, see core/beta.py), in-graph and
+differentiable in rho so the online R-hat mode composes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import beta as beta_lib
+from .. import transforms
+from . import base, rand_k
+
+
+def encode(spec, key, client_id, x_cd):
+    payload = rand_k.encode(spec, key, client_id, x_cd)
+    if spec.r_mode == "est":
+        payload["norm_sq"] = jnp.sum(x_cd.astype(jnp.float32) ** 2, axis=-1)
+    return payload
+
+
+def _rho(spec, n, payloads, s, m):
+    if spec.r_mode != "est":
+        return transforms.rho_for(spec.transform, n, spec.r_value)
+    # Online R-hat from unbiased per-client decodes (DESIGN.md §5):
+    #   sum_{i != l} <xh_i, xh_l> = ||sum_i xh_i||^2 - sum_i ||xh_i||^2,
+    # with xh_i = (d/k) scatter(vals_i) and exact ||x_i||^2 side info.
+    d, k = spec.d_block, spec.k
+    scale = d / k
+    sum_dec_sq = jnp.sum((scale * s) ** 2)
+    # ||xh_i||^2 = scale^2 * ||vals_i||^2 (scatter preserves norms)
+    per_client_sq = scale**2 * jnp.sum(payloads["vals"].astype(jnp.float32) ** 2)
+    norm_sq_total = jnp.sum(payloads["norm_sq"]) + 1e-12
+    r_hat = (sum_dec_sq - per_client_sq) / norm_sq_total
+    return transforms.clip_rho(r_hat / (n - 1.0), n)
+
+
+def decode(spec, key, payloads, n):
+    s, m = rand_k.scatter_sum_and_counts(spec, key, payloads["vals"], n)
+    rho = _rho(spec, n, payloads, s, m)
+    b = beta_lib.rand_k_spatial_beta(n, spec.k, spec.d_block, rho)
+    t = transforms.t_apply(m, rho)
+    scaled = jnp.where(m > 0, s / jnp.where(m > 0, t, 1.0), 0.0)
+    return (b / n) * scaled
+
+
+CODEC = base.Codec(encode=encode, decode=decode)
+base.register("rand_k_spatial", CODEC)

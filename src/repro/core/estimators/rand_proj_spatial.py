@@ -1,0 +1,211 @@
+"""Rand-Proj-Spatial family estimator (paper Eq. 5) — the core contribution.
+
+Encode (client i):   xh_i = G_i x_i,  G_i = (1/sqrt(d)) E_i H D_i   (SRHT, Eq. 6)
+Decode (server):     x_hat = (beta/n) (T(S))^dagger sum_i G_i^T G_i x_i,
+                     S = sum_i G_i^T G_i,  T applied to S's eigenvalues.
+
+Two decode paths (tests assert they agree to float tolerance):
+
+- ``direct``  — the paper-literal algorithm: materialise S (d x d), eigh,
+  apply T to the spectrum. O(d^2 nk). Kept as the faithful oracle.
+- ``gram``    — our TPU adaptation (DESIGN.md §3.3): with A = [G_1; ...; G_n]
+  (nk x d) and z = concat of received payloads, S = A^T A and
+
+      x_hat = (beta/n) * A^T U diag(1_{l>0} / T(l)) U^T z,
+      A A^T = U diag(l) U^T   (nk x nk Gram eigendecomposition)
+
+  which is EXACT (y = A^T z lies in range(S)) and costs O((nk)^2 d) MXU
+  matmuls + one small eigh — removing the paper's Limitation #1.
+
+``shared_randomness=True`` uses one {G_i} draw for all chunks of a round, so
+a single Gram eigendecomposition serves every chunk and the per-chunk work
+is two matmuls. ``False`` is the paper-faithful independent-per-chunk mode
+(vmapped) used by the fidelity benchmarks.
+
+Projections: "srht" (the paper's choice), "subsample" (recovers
+Rand-k-Spatial exactly — Lemma 4.1), "gauss" (comparison baseline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels import ops as kops
+from .. import beta as beta_lib
+from .. import transforms
+from . import base
+
+_EPS = 1e-4
+
+
+def _client_draw(spec, ckey):
+    """One (signs, rows) draw for a single client / single chunk."""
+    d, k = spec.d_block, spec.k
+    k1, k2 = jax.random.split(ckey)
+    proj = getattr(spec, "projection", None) or "srht"
+    if proj == "srht":
+        signs = jax.random.rademacher(k1, (d,), jnp.float32)
+        rows = jax.random.permutation(k2, d)[:k]
+        return {"signs": signs, "rows": rows}
+    if proj == "subsample":
+        # derive rows exactly as rand_k._indices does (from the unsplit client
+        # key) so Lemma 4.1 holds bit-for-bit against Rand-k-Spatial.
+        rows = jax.random.permutation(ckey, d)[:k]
+        return {"rows": rows}
+    if proj == "gauss":
+        g = jax.random.normal(k1, (k, d)) / jnp.sqrt(d)
+        return {"g": g}
+    raise ValueError(f"unknown projection {proj!r}")
+
+
+def _apply_g(spec, draw, x_cd):
+    """G x for a chunk batch: (C, d) -> (C, k)."""
+    if "signs" in draw:
+        return kops.srht_encode(x_cd, draw["signs"], draw["rows"], use_pallas=spec.use_pallas)
+    if "g" in draw:
+        return x_cd @ draw["g"].T
+    return jnp.take(x_cd, draw["rows"], axis=-1)
+
+
+def _g_matrix(spec, draw):
+    """Materialise G (k, d) for the Gram/direct decode."""
+    d = spec.d_block
+    if "signs" in draw:
+        return kops.srht_rows_matrix(draw["signs"], draw["rows"], d)
+    if "g" in draw:
+        return draw["g"]
+    return jax.nn.one_hot(draw["rows"], d, dtype=jnp.float32)
+
+
+def encode(spec, key, client_id, x_cd):
+    ckey = base.client_key(key, client_id)
+    c = x_cd.shape[0]
+    if spec.shared_randomness:
+        draw = _client_draw(spec, ckey)
+        vals = _apply_g(spec, draw, x_cd)
+    else:
+        keys = jax.vmap(base.chunk_key, in_axes=(None, 0))(ckey, jnp.arange(c))
+        draws = jax.vmap(lambda kk: _client_draw(spec, kk))(keys)
+        vals = jax.vmap(lambda dr, x: _apply_g(spec, dr, x[None])[0])(draws, x_cd)
+    out = {"vals": vals}
+    if spec.r_mode == "est":
+        out["norm_sq"] = jnp.sum(x_cd.astype(jnp.float32) ** 2, axis=-1)
+    return out
+
+
+def _stack_a(spec, key, n, chunk_id=None):
+    """A = [G_1; ...; G_n] (nk, d) re-derived from the round key."""
+
+    def one(i):
+        ckey = base.client_key(key, i)
+        if chunk_id is not None:
+            ckey = base.chunk_key(ckey, chunk_id)
+        return _g_matrix(spec, _client_draw(spec, ckey))
+
+    mats = jax.vmap(one)(jnp.arange(n))  # (n, k, d)
+    return mats.reshape(n * spec.k, spec.d_block)
+
+
+def _rho_hat(spec, n, z, gram, norm_sq):
+    """Per-chunk online R-hat (DESIGN.md §5). z: (C, n, k); gram: (nk, nk)."""
+    d, k = spec.d_block, spec.k
+    scale = d / k
+    zf = z.reshape(z.shape[0], n * k)
+    total_sq = scale**2 * jnp.einsum("cp,pq,cq->c", zf, gram, zf)
+    g4 = gram.reshape(n, k, n, k)
+    diag_blocks = g4[jnp.arange(n), :, jnp.arange(n), :]  # (n, k, k)
+    per_client_sq = scale**2 * jnp.einsum("cnk,nkl,cnl->c", z, diag_blocks, z)
+    r_hat = (total_sq - per_client_sq) / (jnp.sum(norm_sq, axis=0) + 1e-12)
+    return transforms.clip_rho(r_hat / (n - 1.0), n)  # (C,)
+
+
+def _spectral_weights(spec, n, lam, rho):
+    """1_{l>0} / T(l) per eigenvalue; rho scalar or per-chunk (C,)."""
+    mask = lam > _EPS * jnp.max(lam)
+    if jnp.ndim(rho) == 0:
+        t = transforms.t_apply(lam, rho)
+        return jnp.where(mask, 1.0 / t, 0.0)
+    t = transforms.t_apply(lam[None, :], rho[:, None])
+    return jnp.where(mask[None, :], 1.0 / t, 0.0)  # (C, nk)
+
+
+def _beta(spec, n, rho):
+    if spec.projection == "subsample":
+        # eigenvalues of S are the binomial hit-counts M_j: beta is exact
+        # (Lemma 4.1: the estimator IS Rand-k-Spatial).
+        return beta_lib.rand_k_spatial_beta(n, spec.k, spec.d_block, rho)
+    bank = beta_lib.srht_eig_bank(
+        n, spec.k, spec.d_block, spec.beta_trials, projection=spec.projection
+    )
+    fn = beta_lib.beta_fn_from_bank(bank, n, spec.d_block)
+    if jnp.ndim(rho) == 0:
+        return fn(rho)
+    return jax.vmap(fn)(rho)
+
+
+def _decode_one_gram(spec, n, a, z, norm_sq):
+    """Gram-trick decode. a: (nk, d); z: (C, n, k) -> (C, d)."""
+    gram = a @ a.T  # (nk, nk) — MXU
+    lam, u = jnp.linalg.eigh(gram)
+    if spec.r_mode == "est":
+        rho = _rho_hat(spec, n, z, gram, norm_sq)
+    else:
+        rho = jnp.asarray(transforms.rho_for(spec.transform, n, spec.r_value))
+    w = _spectral_weights(spec, n, lam, rho)  # (nk,) or (C, nk)
+    b = _beta(spec, n, rho)  # scalar or (C,)
+    zf = z.reshape(z.shape[0], n * spec.k)
+    proj = (zf @ u) * (w if w.ndim == 2 else w[None, :])  # (C, nk)
+    y = proj @ u.T  # (C, nk)
+    xh = y @ a  # (C, d) — MXU
+    scale = (b / n) if jnp.ndim(b) == 0 else (b / n)[:, None]
+    return scale * xh
+
+
+def _decode_one_direct(spec, n, a, z, norm_sq):
+    """Paper-literal decode: eigh of S = A^T A (d x d). Oracle path."""
+    s = a.T @ a
+    lam, v = jnp.linalg.eigh(s)  # (d,), (d, d)
+    gram = a @ a.T
+    if spec.r_mode == "est":
+        rho = _rho_hat(spec, n, z, gram, norm_sq)
+    else:
+        rho = jnp.asarray(transforms.rho_for(spec.transform, n, spec.r_value))
+    mask = lam > _EPS * jnp.max(lam)
+    if jnp.ndim(rho) == 0:
+        w = jnp.where(mask, 1.0 / transforms.t_apply(lam, rho), 0.0)[None, :]
+    else:
+        w = jnp.where(
+            mask[None, :], 1.0 / transforms.t_apply(lam[None, :], rho[:, None]), 0.0
+        )
+    b = _beta(spec, n, rho)
+    zf = z.reshape(z.shape[0], n * spec.k)
+    y = zf @ a  # (C, d): y_c = A^T z_c
+    xh = ((y @ v) * w) @ v.T
+    scale = (b / n) if jnp.ndim(b) == 0 else (b / n)[:, None]
+    return scale * xh
+
+
+def decode(spec, key, payloads, n):
+    vals = payloads["vals"]  # (n, C, k)
+    norm_sq = payloads.get("norm_sq")  # (n, C) or None
+    z = jnp.moveaxis(vals, 0, 1).astype(jnp.float32)  # (C, n, k)
+    dec = _decode_one_gram if spec.decode_method == "gram" else _decode_one_direct
+    if spec.shared_randomness:
+        a = _stack_a(spec, key, n)
+        return dec(spec, n, a, z, norm_sq)
+
+    c = vals.shape[1]
+
+    def per_chunk(chunk_id, z_c, nsq_c):
+        a = _stack_a(spec, key, n, chunk_id)
+        nsq = None if norm_sq is None else nsq_c[:, None]
+        return dec(spec, n, a, z_c[None], nsq)[0]
+
+    nsq_arg = jnp.zeros((c, n)) if norm_sq is None else jnp.moveaxis(norm_sq, 0, 1)
+    return jax.vmap(per_chunk)(jnp.arange(c), z, nsq_arg)
+
+
+CODEC = base.Codec(encode=encode, decode=decode)
+base.register("rand_proj_spatial", CODEC)

@@ -1,0 +1,38 @@
+"""Top-k sparsification (Shi et al. 2019): largest-|x| coordinates.
+
+Biased; pairs with error feedback (spec.ef) in the training loop. Indices are
+data-dependent so they are transmitted (int32 per coordinate), unlike the
+seed-derived Rand-k / SRHT payloads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import base
+
+
+def encode(spec, key, client_id, x_cd):
+    vals, idx = jax.lax.top_k(jnp.abs(x_cd), spec.k)
+    vals = jnp.take_along_axis(x_cd, idx, axis=-1)
+    return {"vals": vals, "idx": idx.astype(jnp.int32)}
+
+
+def scatter_mean(vals, idx, n, d):
+    c = vals.shape[1]
+
+    def one(v, ix):
+        return jnp.zeros((c, d), v.dtype).at[jnp.arange(c)[:, None], ix].add(v)
+
+    return jax.vmap(one)(vals, idx).sum(0) / n
+
+
+def decode(spec, key, payloads, n):
+    return scatter_mean(payloads["vals"], payloads["idx"], n, spec.d_block)
+
+
+def self_decode(spec, key, client_id, payload):
+    return scatter_mean(payload["vals"][None], payload["idx"][None], 1, spec.d_block)
+
+
+base.register("top_k", base.Codec(encode=encode, decode=decode, self_decode=self_decode))

@@ -1,0 +1,47 @@
+"""Eigenvalue transformation functions T (paper Eq. 11 and §4.1/4.2).
+
+The whole Rand-*-Spatial family is parameterised by
+
+    T(m) = 1 + rho * (m - 1),      rho = R / (n - 1)
+
+where R in [-1, n-1] is the degree of cross-client correlation (Eq. 7):
+
+    rho = 0                -> T == 1      (no-correlation optimum, Thm 4.4)
+    rho = 1                -> T(m) = m    (full-correlation optimum, "Max", Thm 4.3)
+    rho = (n/2)/(n-1)      -> the practical "Avg" interpolation (unknown R)
+    rho = R/(n-1)          -> "Opt" for a known/estimated R
+
+T is applied to coordinate hit-counts M_j in Rand-k-Spatial and to the
+eigenvalues of S = sum_i G_i^T G_i in Rand-Proj-Spatial.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+VARIANTS = ("one", "max", "avg", "opt")
+
+
+def rho_for(transform: str, n: int, r_value=None):
+    """Interpolation weight rho = R/(n-1) for a transform variant."""
+    if transform == "one":
+        return 0.0
+    if transform == "max":
+        return 1.0
+    if transform == "avg":
+        return (n / 2.0) / (n - 1.0)
+    if transform == "opt":
+        if r_value is None:
+            raise ValueError("transform='opt' needs r_value (known or estimated R)")
+        return r_value / (n - 1.0)
+    raise ValueError(f"unknown transform {transform!r}; pick from {VARIANTS}")
+
+
+def clip_rho(rho, n: int):
+    """Keep T positive on its support: rho in (-1/(n-1), 1]."""
+    lo = -1.0 / (n - 1.0) * 0.999
+    return jnp.clip(rho, lo, 1.0)
+
+
+def t_apply(m, rho):
+    """T(m) = 1 + rho (m - 1). Works on scalars and arrays; rho may be traced."""
+    return 1.0 + rho * (m - 1.0)

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: batched Fast Walsh-Hadamard Transform (FWHT).
+
+This is the compute hot-spot of the paper's SRHT encoding/decoding
+(G_i = (1/sqrt(d)) E_i H D_i): every encode applies ``H @ (D_i x)`` and every
+decode applies ``H @ scatter(payload)``.
+
+TPU adaptation (see DESIGN.md §3.2): instead of the classic log2(d)-stage
+butterfly (VPU add/sub, memory-bound, one HBM round-trip per stage under XLA
+fusion limits) we use the Kronecker factorisation of the Sylvester Hadamard
+matrix
+
+    H_d = H_a (x) H_b,        d = a*b,  b = min(d, 128)
+
+so that the whole transform becomes two *matmuls* against tiny constant
++-1 matrices, executed on the MXU with the (rows, d) tile resident in VMEM:
+
+    X   = x.reshape(rows*a, b)
+    Y   = X @ H_b                      # lane-dim mix     (MXU, b=128 lanes)
+    Z   = H_a @ Y.reshape(rows, a, b)  # sublane-dim mix  (MXU)
+    out = Z.reshape(rows, d)
+
+The reshape (rows, a*b) -> (rows*a, b) moves no data when b is a multiple of
+the 128-lane width; the stage-2 contraction only permutes major dims. The
+Rademacher sign flip (D_i) and the 1/sqrt(d) scale are fused into the kernel
+(signs multiply on load; scale folded into the H_b constant), so an SRHT
+encode is a single VMEM-resident pass over the data.
+
+Validated against the pure-jnp oracle (kernels/ref.py) in interpret mode on
+CPU; on TPU the same kernel lowers via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+
+def _kernel(h_a_ref, h_b_ref, s_ref, x_ref, o_ref, *, a: int, b: int, with_signs: bool):
+    x = x_ref[...].astype(jnp.float32)  # (bt, d)
+    bt = x.shape[0]
+    if with_signs:
+        x = x * s_ref[...].astype(jnp.float32)  # (1, d) broadcast over rows
+    # stage 1: mix within contiguous groups of b (lane dimension).
+    xg = x.reshape(bt * a, b)
+    y = jax.lax.dot_general(
+        xg, h_b_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bt*a, b); H_b symmetric so X @ H_b == X @ H_b^T
+    if a > 1:
+        # stage 2: mix across the a groups (sublane dimension).
+        y3 = y.reshape(bt, a, b)
+        z = jax.lax.dot_general(
+            h_a_ref[...], y3,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (a, bt, b)
+        out = z.transpose(1, 0, 2).reshape(bt, a * b)
+    else:
+        out = y.reshape(bt, b)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _split_dims(d: int) -> tuple[int, int]:
+    if d & (d - 1) != 0 or d < 2:
+        raise ValueError(f"FWHT dim must be a power of two >= 2, got {d}")
+    b = min(d, 128)
+    return d // b, b
+
+
+def _pick_block_rows(n_rows: int, d: int) -> int:
+    # keep in/out tiles + constants well under ~8 MiB of VMEM.
+    budget = 2 * 1024 * 1024  # floats per tile buffer
+    bt = max(8, budget // d)
+    bt = 1 << (bt.bit_length() - 1)  # round down to power of two
+    return int(min(bt, max(8, n_rows)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("with_signs", "scale", "block_rows", "interpret")
+)
+def fwht_pallas(
+    x: jnp.ndarray,
+    signs: jnp.ndarray | None = None,
+    *,
+    with_signs: bool = False,
+    scale: float = 1.0,
+    block_rows: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched FWHT over the last axis: ``scale * H_d @ (signs? * x)``.
+
+    x:     (rows, d), d a power of two (>=2); rows arbitrary (padded to tile).
+    signs: optional (d,) +-1 Rademacher diagonal, fused on load.
+    scale: constant folded into the H_b stage (e.g. 1/sqrt(d) for SRHT).
+    """
+    rows, d = x.shape
+    a, b = _split_dims(d)
+    bt = block_rows or _pick_block_rows(rows, d)
+    pad = (-rows) % bt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    n_tiles = x.shape[0] // bt
+
+    h_a = jnp.asarray(_ref.hadamard_matrix(a), jnp.float32)
+    h_b = jnp.asarray(_ref.hadamard_matrix(b) * scale, jnp.float32)
+    if signs is None:
+        signs2 = jnp.ones((1, d), jnp.float32)
+    else:
+        signs2 = signs.reshape(1, d).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, a=a, b=b, with_signs=with_signs and signs is not None),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(h_a, h_b, signs2, x)
+    if pad:
+        out = out[:rows]
+    return out

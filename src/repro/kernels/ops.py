@@ -1,0 +1,138 @@
+"""Jit'd public wrappers around the Pallas kernels, with CPU fallbacks.
+
+``fwht``        - batched Walsh-Hadamard transform over the last axis.
+``srht_encode`` - fused SRHT encode:  (1/sqrt(d)) (H (signs*x))[rows].
+``srht_decode`` - SRHT adjoint:       (1/sqrt(d)) signs * (H scatter(u)).
+
+On TPU the Pallas kernel is used (compiled); elsewhere the same kernel body
+runs in interpret mode, or the pure-jnp oracle for tiny shapes where the
+interpreter overhead dominates. The oracle (kernels/ref.py) is the
+correctness contract; tests assert allclose across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as _ref
+from .fwht import fwht_pallas
+
+# interpret-mode execution is pure-python per grid step; for the small chunk
+# sizes used on CPU the vectorised oracle is much faster. The Pallas path is
+# still exercised (interpret=True) by tests and by `use_pallas="force"`.
+_PALLAS_MIN_ELEMS = 1 << 22
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _should_use_pallas(n_elems: int, use_pallas: str | bool) -> tuple[bool, bool]:
+    """-> (use_kernel, interpret)"""
+    if use_pallas == "force":
+        return True, not _on_tpu()
+    if use_pallas == "never" or use_pallas is False:
+        return False, False
+    if _on_tpu():
+        return True, False
+    return n_elems >= _PALLAS_MIN_ELEMS, True
+
+
+def fwht(x: jnp.ndarray, *, scale: float = 1.0, use_pallas: str | bool = "auto") -> jnp.ndarray:
+    """``scale * H_d @ x`` along the last axis; x: (..., d)."""
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, d)
+    use, interp = _should_use_pallas(x2.size, use_pallas)
+    if use:
+        out = fwht_pallas(x2, with_signs=False, scale=scale, interpret=interp)
+    else:
+        out = _ref.fwht_ref(x2)
+        if scale != 1.0:
+            out = out * jnp.asarray(scale, out.dtype)
+    return out.reshape(*lead, d)
+
+
+def srht_encode(
+    x: jnp.ndarray,
+    signs: jnp.ndarray,
+    rows: jnp.ndarray,
+    *,
+    use_pallas: str | bool = "auto",
+) -> jnp.ndarray:
+    """Fused SRHT encode ``G x = (1/sqrt(d)) (H (signs * x))[rows]``.
+
+    x: (..., d); signs: (d,); rows: (k,) int32. -> (..., k)
+    The sign-multiply and 1/sqrt(d) scale are fused into the kernel; the
+    row-gather stays in XLA (cheap, k << d).
+    """
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, d)
+    use, interp = _should_use_pallas(x2.size, use_pallas)
+    inv = 1.0 / math.sqrt(d)
+    if use:
+        t = fwht_pallas(x2, signs, with_signs=True, scale=inv, interpret=interp)
+    else:
+        t = _ref.fwht_ref(x2 * signs) * jnp.asarray(inv, x2.dtype)
+    out = jnp.take(t, rows, axis=-1)
+    return out.reshape(*lead, rows.shape[0])
+
+
+def srht_decode(
+    u: jnp.ndarray,
+    signs: jnp.ndarray,
+    rows: jnp.ndarray,
+    d: int,
+    *,
+    use_pallas: str | bool = "auto",
+) -> jnp.ndarray:
+    """SRHT adjoint ``G^T u = (1/sqrt(d)) signs * (H scatter_rows(u))``.
+
+    u: (..., k) -> (..., d). H is symmetric so H^T == H.
+    """
+    k = u.shape[-1]
+    lead = u.shape[:-1]
+    u2 = u.reshape(-1, k)
+    full = jnp.zeros((u2.shape[0], d), u2.dtype)
+    full = full.at[:, rows].set(u2)
+    use, interp = _should_use_pallas(full.size, use_pallas)
+    inv = 1.0 / math.sqrt(d)
+    if use:
+        t = fwht_pallas(full, with_signs=False, scale=inv, interpret=interp)
+        out = t * signs
+    else:
+        out = _ref.fwht_ref(full) * (signs * jnp.asarray(inv, u2.dtype))
+    return out.reshape(*lead, d)
+
+
+def flash_attention(q, k, v, *, rep: int, window: int = 0, q_offset: int = 0,
+                    q_tile: int = 128, kv_tile: int = 128,
+                    use_pallas: str | bool = "auto"):
+    """Tiled flash attention; q (N_q, Sq, dh), k/v (N_kv, Sk, dh).
+
+    Pallas kernel on TPU; oracle elsewhere (interpret mode is exercised by
+    tests — running it for real workloads on CPU is interpreter-bound).
+    """
+    from .flash_attention import flash_attention_pallas
+
+    use, interp = _should_use_pallas(q.size, use_pallas)
+    if use_pallas == "force" or (use and _on_tpu()):
+        return flash_attention_pallas(
+            q, k, v, rep=rep, window=window, q_offset=q_offset,
+            q_tile=q_tile, kv_tile=kv_tile, interpret=interp,
+        )
+    return _ref.flash_attention_ref(q, k, v, rep=rep, window=window, q_offset=q_offset)
+
+
+def srht_rows_matrix(signs: jnp.ndarray, rows: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Materialise G = (1/sqrt(d)) E H D as a (k, d) matrix.
+
+    Used by the Gram-trick decode (DESIGN.md §3.3) where A = stack(G_i) is
+    fed to MXU matmuls. Row r of E H D is H[rows[r], :] * signs.
+    """
+    h = jnp.asarray(_ref.hadamard_matrix(d), jnp.float32)
+    return (h[rows, :] * signs[None, :]) * (1.0 / np.sqrt(d))

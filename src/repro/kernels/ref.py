@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground-truth implementations used by the per-kernel allclose
+tests (tests/test_kernels.py) and as the CPU fallback path in
+``repro.core.hadamard``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def hadamard_matrix(d: int, dtype=np.float32) -> np.ndarray:
+    """Sylvester-ordered Hadamard matrix H_d with +-1 entries (d = 2**m)."""
+    if d & (d - 1) != 0 or d < 1:
+        raise ValueError(f"d must be a power of two, got {d}")
+    h = np.array([[1.0]], dtype=np.float64)
+    while h.shape[0] < d:
+        h = np.block([[h, h], [h, -h]])
+    return h.astype(dtype)
+
+
+@functools.partial(jnp.vectorize, signature="(d)->(d)")
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalised Fast Walsh-Hadamard Transform along the last axis.
+
+    Computes ``H_d @ x`` for the Sylvester-ordered Hadamard matrix via the
+    classic log2(d)-stage butterfly. O(d log d) adds. Matches
+    ``hadamard_matrix(d) @ x`` exactly (integer arithmetic on +-1 weights).
+    """
+    (d,) = x.shape
+    if d & (d - 1) != 0:
+        raise ValueError(f"last dim must be a power of two, got {d}")
+    h = 1
+    while h < d:
+        x = x.reshape(d // (2 * h), 2, h)
+        a = x[:, 0, :]
+        b = x[:, 1, :]
+        x = jnp.stack([a + b, a - b], axis=1).reshape(d)
+        h *= 2
+    return x
+
+
+def srht_encode_ref(x: jnp.ndarray, signs: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """Reference SRHT encode: (1/sqrt(d)) * (H @ (signs * x))[rows].
+
+    x:     (..., d)   input vectors
+    signs: (d,)       Rademacher +-1 diagonal of D_i
+    rows:  (k,)       int32 row subset of E_i (sampled without replacement)
+    returns (..., k)
+    """
+    d = x.shape[-1]
+    t = fwht_ref(x * signs) * (1.0 / np.sqrt(d))
+    return jnp.take(t, rows, axis=-1)
+
+
+def flash_attention_ref(q, k, v, *, rep: int, window: int = 0, q_offset: int = 0):
+    """Oracle for the flash-attention kernel.
+
+    q: (N_q, Sq, dh); k, v: (N_kv, Sk, dh); N_q = N_kv * rep.
+    Causal over absolute positions (q at q_offset + i attends to j <= pos).
+    """
+    nq, sq, dh = q.shape
+    k = jnp.repeat(k, rep, axis=0)
+    v = jnp.repeat(v, rep, axis=0)
+    sk = k.shape[1]
+    s = jnp.einsum("nqd,nkd->nqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / np.sqrt(dh)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = k_pos <= q_pos
+    if window > 0:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None], s, -1e9)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("nqk,nkd->nqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def srht_decode_ref(u: jnp.ndarray, signs: jnp.ndarray, rows: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Reference SRHT adjoint: G^T u = (1/sqrt(d)) * signs * (H @ scatter(u)).
+
+    u:    (..., k)
+    returns (..., d)
+    """
+    full = jnp.zeros(u.shape[:-1] + (d,), u.dtype)
+    full = full.at[..., rows].set(u)
+    return fwht_ref(full) * (signs * (1.0 / np.sqrt(d)))

@@ -1,0 +1,111 @@
+"""Parse compiled HLO text for collective traffic + FLOP/byte statistics.
+
+cost_analysis() has no collective-bytes entry, so we regex the
+post-partitioning HLO: for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute we take the result shape and the
+replica-group size and charge ring-algorithm bytes-per-device:
+
+    all-gather:         out * (g-1)/g        (each device receives the rest)
+    all-reduce:         2 * size * (g-1)/g   (reduce-scatter + all-gather)
+    reduce-scatter:     in * (g-1)/g  = out * (g-1)
+    all-to-all:         size * (g-1)/g
+    collective-permute: size
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[2,128,64]{2,1,0} all-gather(...), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\s(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)[\s(.]"
+)
+_GROUP_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUP_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TUPLE_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUP_RE2.search(line)
+    if m:  # iota form [num_groups,group_size]
+        return int(m.group(2))
+    return default
+
+
+def collective_stats(hlo_text: str, default_group: int = 2) -> dict:
+    """-> {"per_op": {op: {count, result_bytes, wire_bytes}}, totals...}.
+
+    wire_bytes = estimated bytes crossing links per device for one execution.
+    """
+    per_op = defaultdict(lambda: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0})
+    per_group = defaultdict(lambda: {"count": 0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not any(f" {c}" in stripped or stripped.startswith(c) for c in _COLLECTIVES):
+            continue
+        if "-start" in stripped.split("=")[0]:
+            pass  # async start carries the shape; -done lines skipped below
+        if re.match(r"^\s*%?\S*-done", stripped):
+            continue
+        rhs = stripped.split("=", 1)[-1].lstrip()
+        if rhs.startswith("("):
+            # tuple-shaped result, e.g. (bf16[..], bf16[..]) all-reduce(...)
+            opname = next((c for c in _COLLECTIVES if f" {c}(" in stripped), None)
+            if opname is None:
+                continue
+            lhs = stripped.split(opname)[0]
+            shapes = _TUPLE_SHAPE_RE.findall(lhs.split("=")[-1])
+            if not shapes:
+                continue
+            bytes_ = sum(_shape_bytes(dt, dm) for dt, dm in shapes)
+            op = opname
+        else:
+            m = _OP_RE.search(stripped)
+            if not m:
+                continue
+            dt, dims, op = m.group(1), m.group(2), m.group(3)
+            bytes_ = _shape_bytes(dt, dims)
+        g = _group_size(stripped, default_group)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if op == "all-gather":
+            wire = bytes_ * frac
+        elif op == "all-reduce":
+            wire = 2 * bytes_ * frac
+        elif op == "reduce-scatter":
+            wire = bytes_ * (g - 1)
+        elif op == "all-to-all":
+            wire = bytes_ * frac
+        else:  # collective-permute
+            wire = bytes_
+        d = per_op[op]
+        d["count"] += 1
+        d["result_bytes"] += bytes_
+        d["wire_bytes"] += wire
+        g2 = per_group[g]  # mesh-axis attribution: group size identifies the axis
+        g2["count"] += 1
+        g2["wire_bytes"] += wire
+    totals = {
+        "count": sum(v["count"] for v in per_op.values()),
+        "result_bytes": sum(v["result_bytes"] for v in per_op.values()),
+        "wire_bytes": sum(v["wire_bytes"] for v in per_op.values()),
+    }
+    return {"per_op": dict(per_op), "per_group_size": dict(per_group), "totals": totals}

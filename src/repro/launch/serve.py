@@ -1,0 +1,70 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --preset tiny \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..models import init_cache, init_params
+from ..train import make_decode_step, make_prefill_step
+from .train import preset_config
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b", choices=list(configs.ARCHS))
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "small", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = preset_config(args.arch, args.preset)
+    if cfg.input_mode != "tokens":
+        raise SystemExit(f"{cfg.name} is an embeddings-input stub; serve tokens archs")
+    print(f"[serve] {cfg.name} preset={args.preset}: {cfg.n_params()/1e6:.1f}M params")
+    params = init_params(cfg, jax.random.key(args.seed))
+    seq_cap = args.prompt_len + args.gen
+    cache = init_cache(cfg, args.batch, seq_cap)
+
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    prompts = jax.random.randint(
+        jax.random.key(args.seed + 1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    t0 = time.time()
+    logits, cache = prefill(params, cache, prompts)
+    tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_prefill = time.time() - t0
+
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.full((args.batch, 1), args.prompt_len + i, jnp.int32)
+        nxt, _, cache = decode(params, cache, tok, pos)
+        tok = nxt[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.concatenate(out, axis=1)
+    print(f"[serve] prefill {args.batch}x{args.prompt_len} in {t_prefill:.2f}s "
+          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+    print(f"[serve] decoded {args.gen - 1} steps in {t_decode:.2f}s "
+          f"({args.batch*(args.gen-1)/max(t_decode,1e-9):.0f} tok/s)")
+    print(f"[serve] sample continuation (request 0): {gen[0].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+zero allocation) for every (arch x input-shape) dry-run cell."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..dist import sharding as shard_lib
+from ..models import transformer
+from ..models.common import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def _sds(shape, dtype, ns: NamedSharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=ns)
+
+
+def supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    info = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 500k decode skipped (DESIGN.md §6)"
+    if info["kind"] == "train" and cfg.input_mode == "embeddings":
+        # VLM backbone trains on embeddings; still supported (stub frontend)
+        return True, ""
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, mesh, *, n_clients: int = 0):
+    """Training batch SDS. n_clients > 0 adds the leading DME client dim."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    dp = shard_lib.dp_axes(mesh)
+    if n_clients:
+        lead = (n_clients, b // n_clients)
+        tok_spec = P("pod", "data", *([None] * (2 if cfg.input_mode == "embeddings" else 1)))
+        lab_spec = P("pod", "data", None)
+    else:
+        lead = (b,)
+        tok_spec = P(dp, *([None] * (2 if cfg.input_mode == "embeddings" else 1)))
+        lab_spec = P(dp, None)
+    if cfg.input_mode == "embeddings":
+        inputs = _sds(lead + (s, cfg.d_model), jnp.bfloat16, NamedSharding(mesh, tok_spec))
+    else:
+        inputs = _sds(lead + (s,), jnp.int32, NamedSharding(mesh, tok_spec))
+    labels = _sds(lead + (s,), jnp.int32, NamedSharding(mesh, lab_spec))
+    return {"inputs": inputs, "labels": labels}
+
+
+def decode_specs(cfg: ModelConfig, shape_name: str, mesh):
+    """(cache, tokens, positions) SDS for decode; (cache, tokens) for prefill."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    seq_shard = shape_name == "long_500k"
+    cache_abs = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, b, s, jnp.bfloat16)
+    )
+    cache_sh = shard_lib.cache_shardings(cfg, mesh, cache_abs, seq_shard=seq_shard)
+    cache = jax.tree.map(
+        lambda a, ns: _sds(a.shape, a.dtype, ns), cache_abs, cache_sh
+    )
+    dp = shard_lib.dp_axes(mesh)
+    bspec = P(None) if seq_shard else P(dp)
+    if info["kind"] == "prefill":
+        if cfg.input_mode == "embeddings":
+            tokens = _sds((b, s, cfg.d_model), jnp.bfloat16, NamedSharding(mesh, P(dp, None, None)))
+        else:
+            tokens = _sds((b, s), jnp.int32, NamedSharding(mesh, P(dp, None)))
+        return cache, tokens, None
+    if cfg.input_mode == "embeddings":
+        tokens = _sds((b, 1, cfg.d_model), jnp.bfloat16,
+                      NamedSharding(mesh, P(*bspec, None, None)))
+    else:
+        tokens = _sds((b, 1), jnp.int32, NamedSharding(mesh, P(*bspec, None)))
+    positions = _sds((b, 1), jnp.int32, NamedSharding(mesh, P(*bspec, None)))
+    return cache, tokens, positions
+
+
+def params_specs(cfg: ModelConfig, mesh, *, model_pref=shard_lib.MODEL_PREF,
+                 fsdp: bool = True):
+    abs_p = transformer.abstract_params(cfg)
+    shards = shard_lib.param_shardings(cfg, mesh, model_pref=model_pref, fsdp=fsdp)
+    return jax.tree.map(lambda a, ns: _sds(a.shape, a.dtype, ns), abs_p, shards)
+
+
+def opt_state_specs(optimizer, params_sds):
+    """eval_shape the optimizer init; moment trees inherit param shardings."""
+    abs_state = jax.eval_shape(optimizer.init, params_sds)
+
+    def attach(path, leaf):
+        # mu/nu mirror params: reuse the param leaf sharding at the same subpath
+        if path and getattr(path[0], "key", None) in ("mu", "nu", "m"):
+            sub = params_sds
+            for p in path[1:]:
+                key = getattr(p, "key", getattr(p, "idx", None))
+                sub = sub[key]
+            return _sds(leaf.shape, leaf.dtype, sub.sharding)
+        return leaf  # scalars (step): let jit default to replicated
+
+    return jax.tree_util.tree_map_with_path(attach, abs_state)

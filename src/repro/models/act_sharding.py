@@ -1,0 +1,43 @@
+"""Activation sharding constraint hook.
+
+§Perf finding (EXPERIMENTS H-c iteration 2): with constraints only on the
+batch INPUTS, GSPMD propagated a batch-replicated / d_model-sharded layout
+from the embedding gather through every layer — global-batch-sized f32
+all-reduces per block (2x2.1GB/device) and redundant logits compute. The
+production fix (as in MaxText et al.) is to re-assert the canonical
+activation layout (batch over DP axes) at block boundaries.
+
+The model code is mesh-agnostic; launchers install the constraint:
+
+    act_sharding.set_constraint(mesh, P(("pod", "data"), None, None))
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_SHARDING = None  # NamedSharding for (B, S, D) activations
+
+
+def set_constraint(sharding) -> None:
+    global _SHARDING
+    _SHARDING = sharding
+
+
+@contextlib.contextmanager
+def constraint(sharding):
+    global _SHARDING
+    prev = _SHARDING
+    _SHARDING = sharding
+    try:
+        yield
+    finally:
+        _SHARDING = prev
+
+
+def constrain(x):
+    """Apply the installed (B, S, D) constraint if any."""
+    if _SHARDING is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, _SHARDING)

@@ -1,0 +1,171 @@
+"""GQA attention: kv-block-scanned (flash-style) for train/prefill, dense for
+single-token decode. Supports causal masking, sliding windows, QKV bias and
+ring-buffer KV caches with explicit stored positions.
+
+Memory note (DESIGN.md / EXPERIMENTS §Perf): the kv-block online-softmax scan
+bounds the live score tensor to (B, Sq, H, kv_block) instead of
+(B, Sq, H, Sk) — the difference between 8.6 GB and 0.27 GB per device at
+prefill_32k scale.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+_NEG = -1e9
+
+
+def _mask(q_pos, k_pos, window: int):
+    """(B, Sq, Sk) bool. k_pos = -1 marks invalid (unfilled cache) slots."""
+    q = q_pos[:, :, None]
+    k = k_pos[:, None, :]
+    m = (k <= q) & (k >= 0)
+    if window > 0:
+        m &= q - k < window
+    return m
+
+
+def attention_dense(q, k, v, q_pos, k_pos, window: int):
+    """One-shot attention (used for decode / short sequences).
+
+    q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh); *_pos: (B, S*) int32.
+    """
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qr = q.reshape(b, sq, kvh, rep, dh)
+    s = jnp.einsum("bqgrd,bkgd->bqgrk", qr, k, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(dh)
+    m = _mask(q_pos, k_pos, window)[:, :, None, None, :]
+    s = jnp.where(m, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqgrk,bkgd->bqgrd", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, dh)
+
+
+def attention_blocked(q, k, v, q_pos, k_pos, window: int, kv_block: int, unroll=1):
+    """Online-softmax scan over kv blocks (pure-JAX flash attention)."""
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    qr = (q.reshape(b, sq, kvh, rep, dh)).astype(jnp.float32)
+    kb = min(kv_block, sk)
+    nb = -(-sk // kb)
+    pad = nb * kb - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    kblocks = k.reshape(b, nb, kb, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vblocks = v.reshape(b, nb, kb, kvh, dh).transpose(1, 0, 2, 3, 4)
+    pblocks = k_pos.reshape(b, nb, kb).transpose(1, 0, 2)
+    scale = 1.0 / math.sqrt(dh)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb_, vb_, kp = blk
+        s = jnp.einsum("bqgrd,bkgd->bqgrk", qr, kb_.astype(jnp.float32)) * scale
+        msk = _mask(q_pos, kp, window)[:, :, None, None, :]
+        s = jnp.where(msk, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(msk, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqgrk,bkgd->bqgrd", p, vb_.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((b, sq, kvh, rep), _NEG, jnp.float32),
+        jnp.zeros((b, sq, kvh, rep), jnp.float32),
+        jnp.zeros((b, sq, kvh, rep, dh), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, (kblocks, vblocks, pblocks), unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def attn_layer(x, p, cfg, spec, *, positions, cache=None, layer_slot=None):
+    """Full attention layer (pre-norm, residual). Returns (y, new_cache_slot).
+
+    Train/prefill: cache is None, attends causally within x.
+    Decode:        cache = {"k","v","pos"}; x is (B, 1, D); new kv written at
+                   slot positions % S_alloc (ring buffer when windowed).
+    """
+    b, s, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    xn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    q = layers.dense(xn, p["wq"], p.get("bq")).reshape(b, s, h, dh)
+    k = layers.dense(xn, p["wk"], p.get("bk")).reshape(b, s, kvh, dh)
+    v = layers.dense(xn, p["wv"], p.get("bv")).reshape(b, s, kvh, dh)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    if cfg.gqa_repeat_kv and kvh < h and cache is None:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+        kvh = h
+
+    if cache is None or s > 1:
+        # train / prefill: attend over the full in-flight k, v (correct across
+        # ring-buffer eviction), flash-scanned when long.
+        if cfg.attn_impl == "flash":
+            # Pallas VMEM-tiled kernel (positions assumed contiguous per row)
+            from ..kernels import ops as kops
+
+            qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+            kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, s, dh)
+            vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, s, dh)
+            of = kops.flash_attention(qf, kf, vf, rep=h // kvh, window=spec.window)
+            o = of.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+        elif s > cfg.attn_kv_block:
+            o = attention_blocked(q, k, v, positions, positions, spec.window,
+                                  cfg.attn_kv_block, unroll=True if cfg.force_unroll else 1)
+        else:
+            o = attention_dense(q, k, v, positions, positions, spec.window)
+        new_cache = None
+        if cache is not None:
+            # populate cache with the last s_alloc tokens (scatter at pos % alloc)
+            s_alloc = cache["k"].shape[1]
+            sa = min(s, s_alloc)
+            tail_pos = positions[:, s - sa :]
+            idx = tail_pos % s_alloc  # (B, sa)
+            rows = jnp.arange(b)[:, None]
+            new_cache = {
+                "k": cache["k"].at[rows, idx].set(k[:, s - sa :].astype(cache["k"].dtype)),
+                "v": cache["v"].at[rows, idx].set(v[:, s - sa :].astype(cache["v"].dtype)),
+                "pos": cache["pos"].at[rows, idx].set(tail_pos),
+            }
+    else:
+        s_alloc = cache["k"].shape[1]
+        slot = positions[:, 0] % s_alloc  # (B,)
+        upd = lambda buf, new: jax.vmap(
+            lambda bb, nn, ss: jax.lax.dynamic_update_slice_in_dim(bb, nn, ss, axis=0)
+        )(buf, new, slot)
+        ck = upd(cache["k"], k.astype(cache["k"].dtype))
+        cv = upd(cache["v"], v.astype(cache["v"].dtype))
+        cp = jax.vmap(
+            lambda bb, nn, ss: jax.lax.dynamic_update_slice_in_dim(bb, nn, ss, axis=0)
+        )(cache["pos"], positions[:, :1], slot)
+        o = attention_dense(q, ck, cv, positions, cp, spec.window)
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+
+    y = layers.dense(o.reshape(b, s, h * dh), p["wo"])
+    return x + y, new_cache
+
+
+def init_attn_cache(cfg, spec, batch: int, seq_len: int, dtype):
+    """Empty cache for one attention layer (ring-buffered when windowed)."""
+    s_alloc = min(seq_len, spec.window) if spec.window > 0 else seq_len
+    kvh, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((batch, s_alloc, kvh, dh), dtype),
+        "v": jnp.zeros((batch, s_alloc, kvh, dh), dtype),
+        "pos": jnp.full((batch, s_alloc), -1, jnp.int32),
+    }

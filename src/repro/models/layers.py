@@ -1,0 +1,45 @@
+"""Primitive layers (pure JAX, no flax): norms, rope, MLPs, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, dh); positions: broadcastable (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def mlp(x, p, act: str):
+    """Gated SwiGLU (act='silu') or plain GeLU MLP (act='gelu')."""
+    if act == "silu":
+        h = jax.nn.silu(dense(x, p["w_gate"])) * dense(x, p["w_up"])
+    else:
+        h = jax.nn.gelu(dense(x, p["w_up"]))
+    return dense(h, p["w_down"])
+
+
+def embed_tokens(tokens, table, compute_dtype):
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)

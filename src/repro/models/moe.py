@@ -1,0 +1,85 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based grouped matmul.
+
+TPU adaptation: instead of the GShard one-hot dispatch tensor
+(tokens x experts x capacity — O(T*E*C) bytes, prohibitive at 32k tokens),
+tokens are argsorted by expert id and packed into a fixed (E, C, D) buffer;
+expert FFNs run as E-batched MXU matmuls; outputs scatter back to token
+order. Capacity overflow tokens are dropped (standard practice; the residual
+connection carries them) — capacity_factor controls the drop rate.
+
+Supports shared experts (DeepSeekMoE) that process every token densely.
+Returns a load-balance auxiliary loss (Switch-style) accumulated by the
+training loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k_experts / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_ffn(x, p, cfg):
+    """x: (T, D) -> (y (T, D), aux_loss scalar)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k_experts
+    cap = capacity(cfg, t)
+
+    logits = (x.astype(jnp.float32)) @ p["router"].astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(probs, k)  # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e
+    ids_onehot = jax.nn.one_hot(sel, e, dtype=jnp.float32)  # (T, K, E)
+    frac_tokens = ids_onehot.sum((0, 1)) / (t * k)
+    frac_probs = probs.mean(0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    # ---- sort-based dispatch -------------------------------------------
+    flat_e = sel.reshape(-1)  # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e))
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]
+    keep = pos_in_e < cap
+    src_tok = order // k
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[sorted_e, jnp.where(keep, pos_in_e, cap - 1)].add(
+        jnp.where(keep[:, None], x[src_tok], 0.0)
+    )
+
+    # ---- E-batched expert FFN (MXU) ------------------------------------
+    if cfg.act == "silu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype)))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype)))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+    # ---- combine back ---------------------------------------------------
+    gathered = y_buf[sorted_e, jnp.clip(pos_in_e, 0, cap - 1)]  # (T*K, D)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    slot_out = jnp.zeros((t * k, d), x.dtype).at[order].set(gathered)
+    y = (slot_out.reshape(t, k, d) * gate[..., None].astype(x.dtype)).sum(1)
+
+    if cfg.n_shared_experts > 0:
+        y = y + layers.mlp(x, p["shared"], cfg.act)
+    return y, aux
+
+
+def ffn_layer(x, p, cfg, spec):
+    """Pre-norm FFN residual block; dispatches dense vs MoE. -> (y, aux)."""
+    if spec.ffn == "none":
+        return x, jnp.zeros((), jnp.float32)
+    b, s, d = x.shape
+    xn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    if spec.ffn == "dense":
+        return x + layers.mlp(xn, p, cfg.act), jnp.zeros((), jnp.float32)
+    y, aux = moe_ffn(xn.reshape(b * s, d), p, cfg)
+    return x + y.reshape(b, s, d), aux

@@ -1,0 +1,378 @@
+"""Config -> model: parameter definitions, init, forward, loss, decode.
+
+One structural source of truth: ``param_defs(cfg)`` returns a pytree of
+ParamDef (shape, logical axes, init recipe). init_params / abstract_params /
+param_axes are all tree_maps over it, so sharding rules can never drift from
+the real parameter tree.
+
+The repeated block pattern is scanned with weights stacked on a leading
+"layers" axis (bounded HLO for 95-layer models); prologue/epilogue layers
+are unrolled. ``remat="block"`` wraps the scanned block in jax.checkpoint.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import act_sharding, attention, layers, mamba, moe
+from .common import LayerSpec, ModelConfig
+
+
+class ParamDef(NamedTuple):
+    shape: tuple
+    axes: tuple       # logical axis names, len == len(shape)
+    init: str = "normal"   # normal | zeros | ones | scaled | a_log | dt_bias
+    scale: float = 0.02
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+# --------------------------------------------------------------- definitions
+
+
+def _attn_defs(cfg: ModelConfig):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    out = {
+        "norm": ParamDef((d,), (None,), "ones"),
+        "wq": ParamDef((d, h * dh), ("embed", "heads")),
+        "wk": ParamDef((d, kv * dh), ("embed", "heads")),
+        "wv": ParamDef((d, kv * dh), ("embed", "heads")),
+        "wo": ParamDef((h * dh, d), ("heads", "embed"), "scaled"),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamDef((h * dh,), ("heads",), "zeros")
+        out["bk"] = ParamDef((kv * dh,), ("heads",), "zeros")
+        out["bv"] = ParamDef((kv * dh,), ("heads",), "zeros")
+    return out
+
+
+def _dense_ffn_defs(cfg: ModelConfig, d_ff: int):
+    d = cfg.d_model
+    out = {
+        "norm": ParamDef((d,), (None,), "ones"),
+        "w_up": ParamDef((d, d_ff), ("embed", "ff")),
+        "w_down": ParamDef((d_ff, d), ("ff", "embed"), "scaled"),
+    }
+    if cfg.act == "silu":
+        out["w_gate"] = ParamDef((d, d_ff), ("embed", "ff"))
+    return out
+
+
+def _moe_defs(cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    out = {
+        "norm": ParamDef((d,), (None,), "ones"),
+        "router": ParamDef((d, e), ("embed", None)),
+        "w_gate": ParamDef((e, d, f), ("experts", "embed", "ff")),
+        "w_up": ParamDef((e, d, f), ("experts", "embed", "ff")),
+        "w_down": ParamDef((e, f, d), ("experts", "ff", "embed"), "scaled"),
+    }
+    if cfg.n_shared_experts > 0:
+        fs = cfg.n_shared_experts * f
+        shared = {
+            "w_up": ParamDef((d, fs), ("embed", "ff")),
+            "w_down": ParamDef((fs, d), ("ff", "embed"), "scaled"),
+        }
+        if cfg.act == "silu":
+            shared["w_gate"] = ParamDef((d, fs), ("embed", "ff"))
+        out["shared"] = shared
+    return out
+
+
+def _mamba_defs(cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.mamba_d_inner
+    nh, conv_dim = cfg.mamba_heads, cfg.mamba_conv_dim
+    p_in = 2 * di + 2 * cfg.mamba_ngroups * cfg.d_state + nh
+    if cfg.mamba_split_proj:
+        proj = {
+            "in_z": ParamDef((d, di), ("embed", "mamba_inner")),
+            "in_x": ParamDef((d, di), ("embed", "mamba_inner")),
+            "in_bc": ParamDef((d, 2 * cfg.mamba_ngroups * cfg.d_state), ("embed", None)),
+            "in_dt": ParamDef((d, nh), ("embed", None)),
+        }
+    else:
+        proj = {"in_proj": ParamDef((d, p_in), ("embed", "mamba_inner"))}
+    return {
+        "norm": ParamDef((d,), (None,), "ones"),
+        **proj,
+        "conv_w": ParamDef((conv_dim, cfg.d_conv), ("mamba_inner", None)),
+        "conv_b": ParamDef((conv_dim,), ("mamba_inner",), "zeros"),
+        "dt_bias": ParamDef((nh,), (None,), "dt_bias"),
+        "a_log": ParamDef((nh,), (None,), "a_log"),
+        "d_skip": ParamDef((nh,), (None,), "ones"),
+        "out_norm": ParamDef((di,), ("mamba_inner",), "ones"),
+        "out_proj": ParamDef((di, d), ("mamba_inner", "embed"), "scaled"),
+    }
+
+
+def _layer_defs(cfg: ModelConfig, spec: LayerSpec):
+    out = {}
+    if spec.kind == "attn":
+        out["attn"] = _attn_defs(cfg)
+    else:
+        out["mamba"] = _mamba_defs(cfg)
+    if spec.ffn == "dense":
+        out["ffn"] = _dense_ffn_defs(cfg, cfg.d_ff)
+    elif spec.ffn == "moe":
+        out["ffn"] = _moe_defs(cfg)
+    return out
+
+
+def _stack_def(defn: ParamDef, n: int) -> ParamDef:
+    return ParamDef((n,) + defn.shape, ("layers",) + defn.axes, defn.init, defn.scale)
+
+
+def param_defs(cfg: ModelConfig):
+    vp, d = cfg.vocab_padded, cfg.d_model
+    tree = {
+        "embed": ParamDef((vp, d), ("vocab", "embed")),
+        "final_norm": ParamDef((d,), (None,), "ones"),
+        "prologue": tuple(_layer_defs(cfg, s) for s in cfg.prologue),
+        "epilogue": tuple(_layer_defs(cfg, s) for s in cfg.epilogue),
+    }
+    if cfg.n_blocks > 0:
+        block = {
+            f"l{i:02d}": _layer_defs(cfg, s) for i, s in enumerate(cfg.block_pattern)
+        }
+        tree["blocks"] = jax.tree.map(
+            lambda pd: _stack_def(pd, cfg.n_blocks), block, is_leaf=_is_def
+        )
+    else:
+        tree["blocks"] = {}
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamDef((d, vp), ("embed", "vocab"))
+    return tree
+
+
+# --------------------------------------------------------------------- init
+
+
+def _init_leaf(defn: ParamDef, key, dtype):
+    if defn.init == "zeros":
+        return jnp.zeros(defn.shape, dtype)
+    if defn.init == "ones":
+        return jnp.ones(defn.shape, dtype)
+    if defn.init == "a_log":
+        base = jnp.log(jnp.linspace(1.0, 16.0, defn.shape[-1]))
+        return jnp.broadcast_to(base, defn.shape).astype(dtype)
+    if defn.init == "dt_bias":
+        dt = jnp.exp(jnp.linspace(jnp.log(1e-3), jnp.log(1e-1), defn.shape[-1]))
+        inv = jnp.log(jnp.expm1(dt))
+        return jnp.broadcast_to(inv, defn.shape).astype(dtype)
+    scale = defn.scale
+    if defn.init == "scaled":
+        scale = defn.scale / max(1.0, (2.0 * 24.0) ** 0.5)  # residual-branch damping
+    return (jax.random.normal(key, defn.shape) * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key):
+    defs = param_defs(cfg)
+    flat, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(flat))
+    leaves = [_init_leaf(d, k, cfg.params_dtype) for d, k in zip(flat, keys)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def abstract_params(cfg: ModelConfig):
+    defs = param_defs(cfg)
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, cfg.params_dtype), defs, is_leaf=_is_def
+    )
+
+
+def param_axes(cfg: ModelConfig):
+    defs = param_defs(cfg)
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _run_layer(cfg, spec, p, x, aux, positions, cache):
+    if spec.kind == "attn":
+        x, nc = attention.attn_layer(
+            x, p["attn"], cfg, spec, positions=positions,
+            cache=None if cache is None else cache["mix"],
+        )
+    else:
+        x, nc = mamba.mamba_layer(
+            x, p["mamba"], cfg, cache=None if cache is None else cache["mix"]
+        )
+    if spec.ffn != "none":
+        x, a = moe.ffn_layer(x, p["ffn"], cfg, spec)
+        aux = aux + a
+    return x, aux, (None if cache is None else {"mix": nc})
+
+
+def _run_block(cfg, params_block, x, aux, positions, cache_block):
+    new_cache = {}
+    x = act_sharding.constrain(x)
+    for i, spec in enumerate(cfg.block_pattern):
+        kkey = f"l{i:02d}"
+        c = None if cache_block is None else cache_block[kkey]
+        x, aux, nc = _run_layer(cfg, spec, params_block[kkey], x, aux, positions, c)
+        if cache_block is not None:
+            new_cache[kkey] = nc
+    return x, aux, (new_cache if cache_block is not None else None)
+
+
+def backbone(params, cfg: ModelConfig, x, positions, cache=None):
+    """Run all layers. x: (B, S, D). Returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_pro = []
+    for i, spec in enumerate(cfg.prologue):
+        c = None if cache is None else cache["prologue"][i]
+        x, aux, nc = _run_layer(cfg, spec, params["prologue"][i], x, aux, positions, c)
+        new_pro.append(nc)
+
+    if cfg.n_blocks > 0:
+        if cache is None and cfg.force_unroll:
+            # cost-calibration path: no while loops in the compiled HLO
+            def one_block(xx, aa, p_block):
+                xx, aa, _ = _run_block(cfg, p_block, xx, aa, positions, None)
+                return xx, aa
+
+            if cfg.remat == "block":
+                one_block = jax.checkpoint(one_block)
+            for i in range(cfg.n_blocks):
+                p_block = jax.tree.map(lambda l: l[i], params["blocks"])
+                x, aux = one_block(x, aux, p_block)
+            new_blocks = None
+        elif cache is None:
+
+            def body(carry, p_block):
+                xx, aa = carry
+                xx, aa, _ = _run_block(cfg, p_block, xx, aa, positions, None)
+                return (xx, aa), None
+
+            if cfg.remat == "block":
+                body = jax.checkpoint(body)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+            new_blocks = None
+        elif cfg.force_unroll:
+            ncs = []
+            for i in range(cfg.n_blocks):
+                p_block = jax.tree.map(lambda l: l[i], params["blocks"])
+                c_block = jax.tree.map(lambda l: l[i], cache["blocks"])
+                x, aux, nc = _run_block(cfg, p_block, x, aux, positions, c_block)
+                ncs.append(nc)
+            new_blocks = jax.tree.map(lambda *ls: jnp.stack(ls), *ncs)
+        else:
+
+            def body(carry, xs):
+                xx, aa = carry
+                p_block, c_block = xs
+                xx, aa, nc = _run_block(cfg, p_block, xx, aa, positions, c_block)
+                return (xx, aa), nc
+
+            (x, aux), new_blocks = jax.lax.scan(
+                body, (x, aux), (params["blocks"], cache["blocks"])
+            )
+
+    new_epi = []
+    for i, spec in enumerate(cfg.epilogue):
+        c = None if cache is None else cache["epilogue"][i]
+        x, aux, nc = _run_layer(cfg, spec, params["epilogue"][i], x, aux, positions, c)
+        new_epi.append(nc)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "prologue": tuple(new_pro),
+            "blocks": new_blocks if cfg.n_blocks > 0 else {},
+            "epilogue": tuple(new_epi),
+        }
+    return x, aux, new_cache
+
+
+def embed_inputs(params, cfg: ModelConfig, inputs):
+    if cfg.input_mode == "tokens":
+        x = layers.embed_tokens(inputs, params["embed"], cfg.compute_dtype)
+    else:
+        x = inputs.astype(cfg.compute_dtype)
+    return act_sharding.constrain(x)
+
+
+def logits_fn(params, cfg: ModelConfig, x):
+    x = act_sharding.constrain(x)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def forward(params, cfg: ModelConfig, inputs, positions=None):
+    """Train/prefill forward. inputs: (B, S) tokens or (B, S, D) embeds."""
+    b, s = inputs.shape[0], inputs.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_inputs(params, cfg, inputs)
+    x, aux, _ = backbone(params, cfg, x, positions)
+    return logits_fn(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Next-token CE (+ router aux). batch: {"inputs", "labels"}; labels<0 ignored."""
+    logits, aux = forward(params, cfg, batch["inputs"])
+    labels = batch["labels"]
+    valid = labels >= 0
+    labels_safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = jnp.where(valid, nll, 0.0).sum() / denom
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ------------------------------------------------------------------- decode
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+
+    def one(spec: LayerSpec):
+        if spec.kind == "attn":
+            return {"mix": attention.init_attn_cache(cfg, spec, batch, seq_len, dtype)}
+        return {"mix": mamba.init_mamba_cache(cfg, batch, dtype)}
+
+    cache = {
+        "prologue": tuple(one(s) for s in cfg.prologue),
+        "epilogue": tuple(one(s) for s in cfg.epilogue),
+    }
+    if cfg.n_blocks > 0:
+        block = {f"l{i:02d}": one(s) for i, s in enumerate(cfg.block_pattern)}
+        cache["blocks"] = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (cfg.n_blocks,) + l.shape).astype(l.dtype),
+            block,
+        )
+    else:
+        cache["blocks"] = {}
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, inputs, positions):
+    """One-token decode. inputs: (B, 1) tokens or (B, 1, D); positions: (B, 1).
+
+    Returns (logits (B, 1, vocab_padded) f32, new_cache).
+    """
+    x = embed_inputs(params, cfg, inputs)
+    x, _, new_cache = backbone(params, cfg, x, positions, cache)
+    return logits_fn(params, cfg, x), new_cache
+
+
+def prefill(params, cfg: ModelConfig, cache, inputs):
+    """Prefill the cache from a full prompt; logits for the LAST position only
+    (avoids materialising (B, S, vocab) at 32k prompt lengths)."""
+    b, s = inputs.shape[0], inputs.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_inputs(params, cfg, inputs)
+    x, _, new_cache = backbone(params, cfg, x, positions, cache)
+    return logits_fn(params, cfg, x[:, -1:]), new_cache

@@ -1,0 +1,1 @@
+from .adamw import AdamW, SGDM  # noqa: F401

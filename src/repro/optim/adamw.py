@@ -1,0 +1,99 @@
+"""Pure-JAX optimizers (no optax). States are pytrees mirroring params, so
+they inherit the params' PartitionSpecs (ZeRO: optimizer state is FSDP-sharded
+exactly like the parameters).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def schedule(self, step):
+        warm = jnp.minimum(1.0, (step + 1) / max(self.warmup_steps, 1))
+        return self.lr * warm
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        if self.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["nu"], grads
+        )
+        lr = self.schedule(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDM:
+    lr: float = 0.1
+    momentum: float = 0.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        if self.momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - self.lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads,
+            )
+            return new_params, {"step": step}, {"grad_norm": global_norm(grads), "lr": self.lr}
+        m = jax.tree.map(
+            lambda mm, g: self.momentum * mm + g.astype(jnp.float32), state["m"], grads
+        )
+        new_params = jax.tree.map(
+            lambda p, mm: (p.astype(jnp.float32) - self.lr * mm).astype(p.dtype), params, m
+        )
+        return new_params, {"m": m, "step": step}, {"grad_norm": global_norm(grads), "lr": self.lr}

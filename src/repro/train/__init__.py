@@ -1,0 +1,2 @@
+from .train_step import make_train_step, init_train_state  # noqa: F401
+from .serve_step import make_decode_step, make_prefill_step  # noqa: F401

@@ -1,0 +1,29 @@
+"""Serving steps: prefill (builds cache) and single-token decode.
+
+The paper's technique targets gradient aggregation, so serve steps carry no
+DME compression (noted per-cell in EXPERIMENTS.md). The decode step with a
+sequence-sharded cache relies on GSPMD partitioning the softmax reductions
+over the sharded KV length (partial max/sum + all-reduce — flash-decode
+combine without hand-written collectives).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..models import transformer
+
+
+def make_decode_step(cfg):
+    def decode_step(params, cache, tokens, positions):
+        logits, new_cache = transformer.decode_step(params, cfg, cache, tokens, positions)
+        next_token = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+        return next_token, logits, new_cache
+
+    return decode_step
+
+
+def make_prefill_step(cfg):
+    def prefill(params, cache, tokens):
+        return transformer.prefill(params, cfg, cache, tokens)
+
+    return prefill

@@ -1,0 +1,38 @@
+"""Unit tests for the HLO collective parser used by the roofline harness."""
+from repro.launch.hlo_stats import collective_stats
+
+SAMPLE = """
+ENTRY %main {
+  %ag = f32[4,128]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = bf16[256,512]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %rs = f32[8,64]{1,0} reduce-scatter(%y), replica_groups={{0,1}}, dimensions={0}
+  %cp = f32[1024]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %aa = f32[2,2]{1,0} all-to-all(%w), replica_groups={{0,1,2,3}}
+  %ag2 = (f32[4]{0}, f32[8]{0}) all-reduce(%t1, %t2), replica_groups={{0,1}}
+}
+"""
+
+
+def test_counts_and_bytes():
+    st = collective_stats(SAMPLE, default_group=4)
+    per = st["per_op"]
+    assert per["all-gather"]["count"] == 1
+    assert per["all-gather"]["result_bytes"] == 4 * 128 * 4
+    # ring all-gather: (g-1)/g of the result crosses links
+    assert per["all-gather"]["wire_bytes"] == 4 * 128 * 4 * 3 / 4
+    assert per["all-reduce"]["count"] == 2
+    # iota group form [16,16] -> group size 16
+    ar_bytes = 256 * 512 * 2
+    tuple_wire = 2 * (4 + 8) * 4 * (1 / 2)
+    assert abs(per["all-reduce"]["wire_bytes"] - (2 * ar_bytes * 15 / 16 + tuple_wire)) < 1
+    assert per["reduce-scatter"]["count"] == 1
+    assert per["collective-permute"]["wire_bytes"] == 1024 * 4
+    assert st["totals"]["count"] == 6
+
+
+def test_group_size_attribution():
+    st = collective_stats(SAMPLE, default_group=4)
+    gs = st["per_group_size"]
+    assert 2 in gs and 16 in gs and 4 in gs
+    # the pod-axis bucket (g=2): reduce-scatter + tuple all-reduce
+    assert gs[2]["count"] == 2

@@ -1,0 +1,96 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.fwht import fwht_pallas
+
+
+@pytest.mark.parametrize("d", [2, 8, 64, 128, 256, 1024, 2048])
+def test_fwht_ref_matches_matrix(d):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((3, d)).astype(np.float32)
+    h = ref.hadamard_matrix(d)
+    got = np.asarray(ref.fwht_ref(jnp.asarray(x)))
+    want = x @ h.T  # H symmetric; explicit anyway
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4 * np.sqrt(d))
+
+
+@pytest.mark.parametrize("d", [128, 256, 512, 1024, 4096])
+@pytest.mark.parametrize("rows", [1, 7, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_pallas_matches_ref(d, rows, dtype):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((rows, d)), dtype)
+    got = fwht_pallas(x, interpret=True, block_rows=16)
+    want = ref.fwht_ref(x.astype(jnp.float32))
+    tol = 1e-4 * d if dtype == jnp.float32 else 0.1 * d
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("d,k", [(256, 16), (1024, 64)])
+def test_srht_encode_fused_matches_ref(d, k):
+    key = jax.random.key(2)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (5, d))
+    signs = jax.random.rademacher(k2, (d,), jnp.float32)
+    rows = jax.random.permutation(k3, d)[:k]
+    got = ops.srht_encode(x, signs, rows, use_pallas="force")
+    want = ref.srht_encode_ref(x, signs, rows)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+@pytest.mark.parametrize("d,k", [(256, 16), (1024, 64)])
+def test_srht_decode_is_adjoint(d, k):
+    """<G x, u> == <x, G^T u> for all x, u."""
+    key = jax.random.key(3)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (d,))
+    u = jax.random.normal(k2, (k,))
+    signs = jax.random.rademacher(k3, (d,), jnp.float32)
+    rows = jax.random.permutation(k4, d)[:k]
+    gx = ops.srht_encode(x[None], signs, rows)[0]
+    gtu = ops.srht_decode(u[None], signs, rows, d)[0]
+    np.testing.assert_allclose(
+        float(jnp.dot(gx, u)), float(jnp.dot(x, gtu)), rtol=1e-4
+    )
+
+
+def test_srht_rows_matrix_matches_encode():
+    d, k = 512, 32
+    key = jax.random.key(4)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (d,))
+    signs = jax.random.rademacher(k2, (d,), jnp.float32)
+    rows = jax.random.permutation(k3, d)[:k]
+    g = ops.srht_rows_matrix(signs, rows, d)
+    np.testing.assert_allclose(
+        np.asarray(g @ x), np.asarray(ops.srht_encode(x[None], signs, rows)[0]),
+        rtol=1e-4, atol=1e-5,
+    )
+    # G G^T has orthogonal-ish rows: diag == k-independent (rows of H have norm sqrt(d))
+    np.testing.assert_allclose(np.diag(np.asarray(g @ g.T)), np.ones(k), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logd=st.integers(min_value=3, max_value=11),
+    rows=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fwht_property_involution_and_parseval(logd, rows, seed):
+    """H (H x) = d x (involution), ||Hx||^2 = d ||x||^2 (Parseval)."""
+    d = 1 << logd
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, d)).astype(np.float32))
+    hx = ops.fwht(x)
+    hhx = ops.fwht(hx)
+    np.testing.assert_allclose(np.asarray(hhx), np.asarray(x) * d, rtol=2e-3, atol=1e-2 * d)
+    np.testing.assert_allclose(
+        np.sum(np.asarray(hx) ** 2, -1), d * np.sum(np.asarray(x) ** 2, -1), rtol=2e-3
+    )

@@ -1,0 +1,66 @@
+"""Payload quantization (sparsification x quantization — paper §7 future
+work): int8 stochastic rounding keeps the composed estimator unbiased and
+cuts payload bytes 4x for a small MSE premium."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EstimatorSpec, correlation, mean_estimate
+from repro.core.estimators import base as est_base
+
+
+def _xs(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = rng.standard_normal(d)
+    xs = np.stack([shared + 0.3 * rng.standard_normal(d) for _ in range(n)])
+    return jnp.asarray(xs[:, None, :], jnp.float32)
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_quantized_payload_unbiased(dtype):
+    n, d, k = 6, 128, 16
+    xs = _xs(n, d)
+    spec = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=d,
+                         transform="avg", payload_dtype=dtype)
+    xbar = np.asarray(jnp.mean(xs, axis=0))
+
+    @jax.jit
+    def one(key):
+        return mean_estimate(spec, key, xs)
+
+    xhs = np.asarray(jax.lax.map(one, jax.random.split(jax.random.key(0), 800)))
+    sem = xhs.std(0) / np.sqrt(len(xhs)) + 1e-4
+    assert (np.abs(xhs.mean(0) - xbar) < 6 * sem + 6e-3).all()
+
+
+def test_int8_payload_bytes_and_mse_tradeoff():
+    n, d, k = 6, 256, 32
+    xs = _xs(n, d, seed=1)
+    key = jax.random.key(1)
+    sizes, mses = {}, {}
+    for dtype in ("float32", "int8"):
+        spec = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=d,
+                             transform="avg", payload_dtype=dtype)
+        payload = est_base.encode(spec, key, 0, xs[0])
+        sizes[dtype] = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(payload))
+
+        @jax.jit
+        def one(kk, spec=spec):
+            return correlation.mse(mean_estimate(spec, kk, xs), jnp.mean(xs, 0))
+
+        mses[dtype] = float(jnp.mean(jax.lax.map(one, jax.random.split(key, 200))))
+    assert sizes["int8"] < sizes["float32"] / 3  # ~4x minus the per-chunk scale
+    assert mses["int8"] < mses["float32"] * 1.5  # small premium
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([8, 16, 32]))
+def test_property_decode_finite_any_seed(seed, k):
+    """Property: decode is finite for any round key / budget (no NaN paths)."""
+    xs = _xs(4, 64, seed=seed % 1000)
+    spec = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=64,
+                         transform="avg", payload_dtype="int8")
+    xh = mean_estimate(spec, jax.random.key(seed), xs)
+    assert bool(jnp.isfinite(xh).all())
