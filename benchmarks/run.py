@@ -1,50 +1,116 @@
 """Benchmark harness: one module per paper table/figure + roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--only mse,tasks,systems,roofline]
+    PYTHONPATH=src python -m benchmarks.run --smoke   # CI: reduced sizes
 
-Prints ``name,us_per_call,derived`` CSV (and tees a copy to
-results/bench_output.csv).
+Prints ``name,us_per_call,derived`` CSV (teed to results/bench_output.csv)
+and writes the same rows as ``results/BENCH_<mode>.json`` so CI can archive
+the perf trajectory as a workflow artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def smoke(out: list[str]) -> None:
+    """Reduced-size sweep for CI: small (n, k, d), few trials, plus a
+    round-trip through the dist layer's compressed-mean collective."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import EstimatorSpec
+    from repro.dist import collectives
+
+    from . import bench_systems
+    from .common import base_vector_clients, mse_over_trials, rows, timed
+
+    d, n, k = 256, 8, 16
+    xs, r = base_vector_clients(n, d, 3, seed=0)
+    for name, tf in [("rand_k", "one"), ("rand_k_spatial", "avg"),
+                     ("rand_proj_spatial", "avg")]:
+        spec = EstimatorSpec(name=name, k=k, d_block=d, transform=tf)
+        mse, sec = mse_over_trials(spec, xs, trials=20)
+        rows(out, f"smoke/mse_R{r:.1f}/n{n}_k{k}/{name}", sec * 1e6, f"{mse:.4f}")
+
+    bench_systems.walltime(out, n=4, k=16, d=256)
+
+    # dist-layer round-trip: pytree -> chunked encode -> server decode -> tree
+    rng = np.random.default_rng(0)
+    tree = {
+        "w": jnp.asarray(rng.standard_normal((n, 64, 64)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((n, 96)), jnp.float32),
+    }
+    for payload_dtype in ("float32", "int8"):
+        spec = EstimatorSpec(name="rand_proj_spatial", k=32, d_block=256,
+                             transform="avg", payload_dtype=payload_dtype)
+        _, info, _ = collectives.compressed_mean_tree(spec, jax.random.key(0), tree)
+        fn = jax.jit(
+            lambda key, s=spec: collectives.compressed_mean_tree(s, key, tree)[0]
+        )
+        sec, _ = timed(fn, jax.random.key(0))
+        rows(out, f"smoke/dist/compressed_mean_tree/{payload_dtype}", sec * 1e6,
+             f"bytes_per_client={info['payload_bytes_per_client']};"
+             f"ratio={info['full_bytes'] / info['payload_bytes_per_client']:.1f}x")
+
+
+def write_json(out: list[str], mode: str, secs: float) -> str:
+    records = []
+    for line in out[1:]:
+        name, us, derived = line.split(",", 2)
+        records.append({"name": name, "us_per_call": float(us), "derived": derived})
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{mode}.json")
+    with open(path, "w") as f:
+        json.dump({"mode": mode, "total_s": round(secs, 1), "rows": records}, f, indent=1)
+    return path
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="mse,tasks,systems,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced-size CI sweep; writes results/BENCH_smoke.json")
     args = ap.parse_args()
     sections = set(args.only.split(","))
 
     out: list[str] = ["name,us_per_call,derived"]
     t0 = time.time()
-    if "mse" in sections:
-        from . import bench_mse
+    if args.smoke:
+        smoke(out)
+    else:
+        if "mse" in sections:
+            from . import bench_mse
 
-        bench_mse.run(out)
-    if "tasks" in sections:
-        from . import bench_tasks
+            bench_mse.run(out)
+        if "tasks" in sections:
+            from . import bench_tasks
 
-        bench_tasks.run(out)
-    if "systems" in sections:
-        from . import bench_systems
+            bench_tasks.run(out)
+        if "systems" in sections:
+            from . import bench_systems
 
-        bench_systems.run(out)
-    if "roofline" in sections:
-        from . import roofline
+            bench_systems.run(out)
+        if "roofline" in sections:
+            from . import roofline
 
-        roofline.run(out)
+            roofline.run(out)
 
     print("\n".join(out))
-    os.makedirs(os.path.join(os.path.dirname(__file__), "..", "results"), exist_ok=True)
-    with open(os.path.join(os.path.dirname(__file__), "..", "results", "bench_output.csv"), "w") as f:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "bench_output.csv"), "w") as f:
         f.write("\n".join(out) + "\n")
-    print(f"# total {time.time()-t0:.1f}s, {len(out)-1} rows", file=sys.stderr)
+    secs = time.time() - t0
+    path = write_json(out, "smoke" if args.smoke else "full", secs)
+    print(f"# total {secs:.1f}s, {len(out)-1} rows -> {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -43,9 +43,11 @@ class SyntheticLM:
     def _skew(self, tokens, client_id):
         if self.non_iid <= 0:
             return tokens
-        # shift each client's tokens into its own vocab band
-        band = (client_id * (self.vocab_size // max(self.n_clients, 1))) % self.vocab_size
-        skewed = (tokens + band) % self.vocab_size
+        # fold each client's tokens into its own vocab band (a plain shift
+        # mod V is measure-preserving on near-uniform marginals: no skew)
+        width = max(self.vocab_size // max(self.n_clients, 1), 1)
+        band = (client_id * width) % self.vocab_size
+        skewed = band + tokens % width
         take = self.non_iid
         mix = jax.random.bernoulli(
             jax.random.fold_in(jax.random.key(self.seed ^ 0x5EED), client_id),

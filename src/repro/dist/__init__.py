@@ -1,0 +1,13 @@
+"""Distribution layer: sharded compressed-mean collectives, GSPMD placement
+rules, and pipeline parallelism.
+
+Modules:
+    collectives — cross-client compressed-mean (the paper's DME as a
+                  collective): chunked encode at each client, decode at the
+                  server, payload/byte accounting, error-feedback residuals.
+    sharding    — divisibility-aware parameter / cache / batch placement over
+                  (pod, data, model) meshes.
+    pipeline    — layer-pipelined application (GPipe schedule) over a mesh
+                  axis.
+"""
+from . import collectives, pipeline, sharding  # noqa: F401

@@ -1,0 +1,124 @@
+"""GSPMD placement rules over (pod, data, model) meshes.
+
+One rule, applied uniformly from the single structural source of truth
+(``transformer.param_defs``): every parameter names its logical axes, and
+``spec_for`` maps logical axes to mesh axes with divisibility checks —
+a non-divisible dimension falls through to replication instead of forcing
+GSPMD to pad (padding shows up as rematerialisation all-gathers every layer;
+see EXPERIMENTS §Perf).
+
+Placement policy:
+    - the "model" mesh axis goes to the first axis of ``model_pref`` present
+      in the param whose dim is divisible by the model-axis size (tensor
+      parallelism); ``MODEL_PREF_EP`` is the expert-parallel-first variant.
+    - the "data" mesh axis goes to the "embed" axis when divisible (FSDP /
+      ZeRO-3: params and optimizer moments are sharded over data too).
+    - the "pod" axis is NEVER assigned to parameters: pods are DME clients
+      holding full replicas whose gradient exchange is the compressed
+      collective in ``dist.collectives``, not an all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical axes eligible for tensor parallelism, in assignment preference order
+MODEL_PREF = ("heads", "mamba_inner", "ff", "vocab", "experts")
+# expert-parallel-first variant (dryrun --knobs '{"ep_first": true}')
+MODEL_PREF_EP = ("experts", "heads", "mamba_inner", "ff", "vocab")
+
+# logical axes eligible for the data (FSDP) axis, in preference order
+DATA_PREF = ("embed",)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh) -> tuple:
+    """Mesh axes carrying the batch dimension (pod-major)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def spec_for(shape, axes, mesh, *, model_pref=MODEL_PREF, fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter from its logical axis names.
+
+    ``axes`` is a tuple of logical names (or None), len == len(shape).
+    """
+    sizes = mesh_axis_sizes(mesh)
+    model_size = sizes.get("model", 0)
+    data_size = sizes.get("data", 0)
+    assign: list = [None] * len(shape)
+
+    if model_size > 1:
+        for pref in model_pref:
+            if pref in axes:
+                i = axes.index(pref)
+                if shape[i] % model_size == 0:
+                    assign[i] = "model"
+                    break
+    if fsdp and data_size > 1:
+        for pref in DATA_PREF:
+            if pref in axes:
+                i = axes.index(pref)
+                if assign[i] is None and shape[i] % data_size == 0:
+                    assign[i] = "data"
+                    break
+    return P(*assign)
+
+
+def param_shardings(cfg, mesh, *, model_pref=MODEL_PREF, fsdp: bool = True):
+    """NamedSharding pytree matching ``transformer.abstract_params(cfg)``."""
+    from ..models import transformer
+
+    defs = transformer.param_defs(cfg)
+    return jax.tree.map(
+        lambda d: NamedSharding(
+            mesh, spec_for(d.shape, d.axes, mesh, model_pref=model_pref, fsdp=fsdp)
+        ),
+        defs,
+        is_leaf=lambda x: isinstance(x, transformer.ParamDef),
+    )
+
+
+def cache_shardings(cfg, mesh, cache_abs, *, seq_shard: bool = False):
+    """Decode-cache placement. Leaves are keyed by their dict name:
+
+        k/v  (B, S, kvh, dh): batch -> DP, kv heads -> model if divisible
+        pos  (B, S)
+        conv (B, K, convdim):  convdim -> model if divisible
+        ssm  (B, nh, N, hd):   ssm heads -> model if divisible
+
+    ``seq_shard=True`` (long-context, batch ~ 1) shards the sequence dim of
+    k/v/pos over the DP axes instead of the batch dim. Leaves under "blocks"
+    carry a leading stacked-layers dim that is never sharded.
+    """
+    dp = dp_axes(mesh)
+    sizes = mesh_axis_sizes(mesh)
+    model_size = sizes.get("model", 0)
+    dp_size = 1
+    for a in dp:
+        dp_size *= sizes[a]
+
+    def one(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), None)
+        off = 1 if "blocks" in keys else 0  # stacked-layers leading dim
+        spec = [None] * leaf.ndim
+        shape = leaf.shape
+        if seq_shard and name in ("k", "v", "pos"):
+            s_i = off + 1
+            if dp and shape[s_i] % dp_size == 0:
+                spec[s_i] = dp
+        elif dp and shape[off] % dp_size == 0:
+            spec[off] = dp
+        if model_size > 1:
+            if name in ("k", "v") and shape[off + 2] % model_size == 0:
+                spec[off + 2] = "model"
+            elif name == "conv" and shape[off + 2] % model_size == 0:
+                spec[off + 2] = "model"
+            elif name == "ssm" and shape[off + 1] % model_size == 0:
+                spec[off + 1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_abs)

@@ -1,0 +1,29 @@
+"""Shared test config: CPU-only JAX, fixed seeding helpers, `slow` marker.
+
+The main test process must stay on ONE device (the mesh tests compile on
+placeholder devices inside subprocesses that set their own XLA_FLAGS), so no
+device-count flags are set here. Quick local runs: `-m "not slow"` skips the
+subprocess lower+compile tests.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture
+def rng_key():
+    """Fixed jax PRNG round key; fold_in per-case for independent draws."""
+    return jax.random.key(0)
+
+
+@pytest.fixture
+def np_rng():
+    """Fixed numpy Generator for test-data construction."""
+    return np.random.default_rng(0)

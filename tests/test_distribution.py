@@ -145,11 +145,15 @@ _SUBPROC = textwrap.dedent(
     compiled = jax.jit(fn).lower(params, state, batch, step).compile()
     text = compiled.as_text()
     assert "all-gather" in text or "all-reduce" in text
-    print("SUBPROC_OK", compiled.cost_analysis().get("flops", -1))
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {{}}
+    print("SUBPROC_OK", ca.get("flops", -1))
     """
 )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["musicgen-medium", "deepseek-moe-16b"])
 def test_mesh_compile_in_subprocess(arch):
     env = dict(os.environ)

@@ -4,6 +4,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 _SUBPROC = textwrap.dedent(
     """
     import os
@@ -42,6 +44,7 @@ _SUBPROC = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 def test_pipeline_matches_serial():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
