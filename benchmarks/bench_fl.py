@@ -1,0 +1,69 @@
+"""repro.fl benchmark: MSE-vs-round and bytes-to-target-accuracy curves per
+task x estimator (the paper's Fig. 4 measured at workload level, plus the
+temporal-decoding comparison the paper's related work motivates).
+
+Rows:
+    fl/<task>/<estimator>[.temporal]     us_per_round    final=<metric>;
+        mean_mse=<...>;bytes=<total>;bytes_to_target=<...|never>
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import EstimatorSpec
+from repro.fl import Cohort, RoundConfig, get_task, run_rounds
+
+from .common import rows
+
+ESTIMATORS = [
+    ("rand_k", dict(), False),
+    ("rand_k_spatial", dict(transform="avg"), False),
+    ("rand_proj_spatial", dict(transform="avg"), False),
+    ("rand_proj_spatial", dict(transform="wavg"), False),
+    ("rand_proj_spatial", dict(transform="avg"), True),  # temporal decode
+]
+
+# (task factory kwargs, d_block, k, rounds, bytes-to-target threshold)
+SETUPS = {
+    "dme": (dict(n_clients=8, d=256, rho=0.9), 256, 26, 40, None),
+    "drift": (dict(n_clients=8, d=256, rho=0.95, omega=0.03), 256, 26, 40, None),
+    "power_iteration": (dict(n_clients=10, d=1024, samples=4000), 1024, 102, 15, 0.5),
+    "linear_regression": (dict(n_clients=10, d=512, samples=4000), 512, 51, 30, 0.05),
+    "logistic_regression": (
+        dict(n_clients=10, feat=64, samples=4000, scheme="dirichlet"), 1024, 102, 30, 0.5
+    ),
+}
+
+
+def run_setup(out, name, task_kw, d_block, k, n_rounds, target, cohort=None):
+    task = get_task(name, **task_kw)
+    cohort = cohort or Cohort(n_clients=task.n_clients)
+    for est, kw, temporal in ESTIMATORS:
+        spec = EstimatorSpec(name=est, k=k, d_block=d_block, **kw)
+        cfg = RoundConfig(n_rounds=n_rounds, temporal=temporal)
+        t0 = time.time()
+        state, hist = run_rounds(task, spec, cohort, cfg)
+        us_round = (time.time() - t0) / n_rounds * 1e6
+        final = "nan" if task.metric is None else f"{hist.metric[-1]:.5f}"
+        btt = "n/a"
+        if target is not None:
+            got = hist.bytes_to_target(target)
+            btt = str(got) if got is not None else "never"
+        tag = f"{est}.{kw.get('transform', 'one')}" + (".temporal" if temporal else "")
+        rows(out, f"fl/{name}/{tag}", us_round,
+             f"final={final};mean_mse={np.nanmean(hist.mse):.6f};"
+             f"bytes={hist.total_bytes};bytes_to_target={btt}")
+
+
+def run(out):
+    for name, (task_kw, d_block, k, n_rounds, target) in SETUPS.items():
+        run_setup(out, name, task_kw, d_block, k, n_rounds, target)
+
+
+def smoke(out):
+    """Reduced-size CI row set: correlated DME + a drifting task."""
+    run_setup(out, "dme", dict(n_clients=8, d=128, rho=0.9), 128, 16, 8, None)
+    run_setup(out, "drift", dict(n_clients=8, d=128, rho=0.95, omega=0.03),
+              128, 16, 8, None)

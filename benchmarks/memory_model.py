@@ -8,7 +8,7 @@ classification and the roofline fraction we therefore model traffic at
 fusion granularity: each MAJOR tensor (weights, layer activations,
 attention scores, MoE buffers, SSD chunk tensors, KV cache) is charged once
 per producing/consuming fusion, with a x3 fwd/remat/bwd multiplier for
-training. Both numbers are reported side by side in EXPERIMENTS.md.
+training. Both numbers are reported side by side in docs/EXPERIMENTS.md.
 
 Key term this model exposes (and the flash-attention kernel removes): the
 materialised attention score tensor, tokens*S*heads_local*4B per layer —

@@ -1,4 +1,4 @@
-"""Roofline analysis from the compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline analysis from the compiled dry-run artifacts (docs/EXPERIMENTS.md §Roofline).
 
 Terms (per device; TPU v5e constants from launch/mesh.py):
 

@@ -1,6 +1,6 @@
 """Benchmark harness: one module per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only mse,tasks,systems,roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only mse,tasks,fl,systems,roofline]
     PYTHONPATH=src python -m benchmarks.run --smoke   # CI: reduced sizes
 
 Prints ``name,us_per_call,derived`` CSV (teed to results/bench_output.csv)
@@ -43,6 +43,10 @@ def smoke(out: list[str]) -> None:
 
     bench_systems.walltime(out, n=4, k=16, d=256)
 
+    from . import bench_fl
+
+    bench_fl.smoke(out)
+
     # dist-layer round-trip: pytree -> chunked encode -> server decode -> tree
     rng = np.random.default_rng(0)
     tree = {
@@ -76,7 +80,7 @@ def write_json(out: list[str], mode: str, secs: float) -> str:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="mse,tasks,systems,roofline")
+    ap.add_argument("--only", default="mse,tasks,fl,systems,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced-size CI sweep; writes results/BENCH_smoke.json")
     args = ap.parse_args()
@@ -95,6 +99,10 @@ def main() -> None:
             from . import bench_tasks
 
             bench_tasks.run(out)
+        if "fl" in sections:
+            from . import bench_fl
+
+            bench_fl.run(out)
         if "systems" in sections:
             from . import bench_systems
 

@@ -3,7 +3,7 @@
 odd layers, dense FFN (14336) on even layers. Mamba sublayers: d_inner=8192,
 d_state=16. [arXiv:2403.19887]
 
-NOTE (DESIGN.md §7): Jamba uses Mamba-1 sublayers; we realise them with the
+NOTE (docs/DESIGN.md §7): Jamba uses Mamba-1 sublayers; we realise them with the
 Mamba2/SSD block at matching (d_inner, d_state) — same interface and
 asymptotics, documented simplification.
 """

@@ -1,7 +1,7 @@
 """Normalisation constant beta_bar calibration.
 
 Unbiasedness of the family estimator x_hat = (beta/n) (T(S))^dagger sum_i
-G_i^T G_i x_i requires (paper App. B.1, and our DESIGN.md §3.4)
+G_i^T G_i x_i requires (paper App. B.1, and our docs/DESIGN.md §3.4)
 
     E[ (T(S))^dagger G_i^T G_i ] = (1/beta) I   for every client i
     =>  beta = n d / E[ tr( (T(S))^dagger S ) ]

@@ -5,7 +5,7 @@ d ~ 1e9. We flatten the gradient pytree, zero-pad to a multiple of
 ``d_block`` (a power of two, so SRHT applies per block), and run the
 estimator vmapped/batched over chunks. All of the paper's per-vector
 guarantees (unbiasedness, MSE) hold per chunk; MSE adds across chunks.
-See DESIGN.md §3.1.
+See docs/DESIGN.md §3.1.
 """
 from __future__ import annotations
 

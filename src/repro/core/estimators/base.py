@@ -2,15 +2,25 @@
 
 Every estimator is a pair of pure functions
 
-    encode(spec, key, client_id, x_cd)   : (C, d) -> payload pytree
-    decode(spec, key, payloads, n)       : stacked payloads (leading n) -> (C, d)
+    encode(spec, key, client_id, x_cd)               : (C, d) -> payload pytree
+    decode(spec, key, payloads, n, client_ids=None)  : stacked payloads
+                                                       (leading n) -> (C, d)
 
 - ``key`` is the *round* key, shared by every client and the server
   (deterministic shared randomness: per-client randomness is re-derived as
   fold_in(key, client_id), so index/sign/seed information is never
-  transmitted — see DESIGN.md §3.6).
+  transmitted — see docs/DESIGN.md §3.6).
 - Payloads are pytrees of arrays with identical structure across clients, so
   they stack/all-gather cleanly.
+- ``client_ids`` decouples key derivation from payload position: when only a
+  subset of clients participates in a round (partial participation, straggler
+  drops — repro.fl), the server decodes the survivors' payloads with their
+  *actual* ids so the re-derived randomness matches what each client used,
+  and normalises by the actual participant count n.
+- ``side_info`` is the temporal-correlation hook (docs/DESIGN.md §8.2, after
+  Rand-k-Temporal): clients encode x_i - side, the server adds side back to
+  the decoded delta mean. Any unbiased codec stays unbiased and its MSE
+  scales with ||x_i - side||^2 instead of ||x_i||^2.
 - ``mean_estimate`` is the one-shot convenience used by benchmarks/tests and
   by the paper-style DME drivers.
 """
@@ -127,13 +137,22 @@ def _dequantize_payload(spec: EstimatorSpec, payload: dict) -> dict:
     return out
 
 
-def encode(spec: EstimatorSpec, key, client_id, x_cd: jnp.ndarray):
+def encode(spec: EstimatorSpec, key, client_id, x_cd: jnp.ndarray, side_info=None):
+    if side_info is not None:
+        x_cd = x_cd - side_info
     payload = get(spec.name).encode(spec, key, client_id, x_cd)
     return _quantize_payload(spec, client_key(key, client_id), payload)
 
 
-def decode(spec: EstimatorSpec, key, payloads, n: int) -> jnp.ndarray:
-    return get(spec.name).decode(spec, key, _dequantize_payload(spec, payloads), n)
+def decode(
+    spec: EstimatorSpec, key, payloads, n: int, client_ids=None, side_info=None
+) -> jnp.ndarray:
+    out = get(spec.name).decode(
+        spec, key, _dequantize_payload(spec, payloads), n, client_ids=client_ids
+    )
+    if side_info is not None:
+        out = out + side_info
+    return out
 
 
 def self_decode(spec: EstimatorSpec, key, client_id, payload) -> jnp.ndarray:
@@ -143,15 +162,21 @@ def self_decode(spec: EstimatorSpec, key, client_id, payload) -> jnp.ndarray:
     return codec.self_decode(spec, key, client_id, _dequantize_payload(spec, payload))
 
 
-def encode_all(spec: EstimatorSpec, key, xs: jnp.ndarray):
-    """xs: (n, C, d) -> stacked payloads (leading n)."""
+def encode_all(spec: EstimatorSpec, key, xs: jnp.ndarray, client_ids=None,
+               side_info=None):
+    """xs: (n, C, d) -> stacked payloads (leading n).
+
+    ``client_ids`` (n,) overrides the default 0..n-1 identity assignment —
+    used when xs holds only the participating subset of a larger cohort.
+    """
     n = xs.shape[0]
-    ids = jnp.arange(n)
-    return jax.vmap(lambda i, x: encode(spec, key, i, x))(ids, xs)
+    ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
+    return jax.vmap(lambda i, x: encode(spec, key, i, x, side_info=side_info))(ids, xs)
 
 
-def mean_estimate(spec: EstimatorSpec, key, xs: jnp.ndarray) -> jnp.ndarray:
+def mean_estimate(spec: EstimatorSpec, key, xs: jnp.ndarray, client_ids=None,
+                  side_info=None) -> jnp.ndarray:
     """One-shot DME: xs (n, C, d) client chunks -> (C, d) mean estimate."""
     n = xs.shape[0]
-    payloads = encode_all(spec, key, xs)
-    return decode(spec, key, payloads, n)
+    payloads = encode_all(spec, key, xs, client_ids=client_ids, side_info=side_info)
+    return decode(spec, key, payloads, n, client_ids=client_ids, side_info=side_info)

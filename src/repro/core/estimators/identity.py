@@ -10,8 +10,14 @@ def encode(spec, key, client_id, x_cd):
     return {"vals": x_cd}
 
 
-def decode(spec, key, payloads, n):
+def decode(spec, key, payloads, n, client_ids=None):
     return jnp.mean(payloads["vals"], axis=0)
 
 
-base.register("identity", base.Codec(encode=encode, decode=decode))
+def self_decode(spec, key, client_id, payload):
+    return payload["vals"]
+
+
+base.register(
+    "identity", base.Codec(encode=encode, decode=decode, self_decode=self_decode)
+)

@@ -31,13 +31,15 @@ def encode(spec, key, client_id, x_cd):
     return {"vals": vals}
 
 
-def scatter_sum_and_counts(spec, key, vals, n):
+def scatter_sum_and_counts(spec, key, vals, n, client_ids=None):
     """Common Rand-k / Rand-k-Spatial decode plumbing.
 
     vals: (n, C, k) -> (sum (C, d), counts (C, d)) of scattered payloads.
+    ``client_ids`` overrides the 0..n-1 id assignment (partial participation).
     """
     c = vals.shape[1]
     d = spec.d_block
+    ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
 
     def one(client_id, v):
         idx = _indices(spec, key, client_id, c)
@@ -45,14 +47,26 @@ def scatter_sum_and_counts(spec, key, vals, n):
         m = jnp.zeros((c, d), jnp.float32).at[jnp.arange(c)[:, None], idx].add(1.0)
         return s, m
 
-    ss, ms = jax.vmap(one)(jnp.arange(n), vals)
+    ss, ms = jax.vmap(one)(ids, vals)
     return ss.sum(0), ms.sum(0)
 
 
-def decode(spec, key, payloads, n):
-    s, _ = scatter_sum_and_counts(spec, key, payloads["vals"], n)
+def decode(spec, key, payloads, n, client_ids=None):
+    s, _ = scatter_sum_and_counts(spec, key, payloads["vals"], n, client_ids)
     return (spec.d_block / (spec.k * n)) * s
 
 
-CODEC = base.Codec(encode=encode, decode=decode)
+def self_decode(spec, key, client_id, payload):
+    """Unbiased per-client reconstruction (d/k) scatter(vals): what the server
+    attributes to this client. Drives error feedback and the FL server's
+    online correlation tracker (repro.fl.server)."""
+    vals = payload["vals"]
+    c = vals.shape[0]
+    idx = _indices(spec, key, client_id, c)
+    s = jnp.zeros((c, spec.d_block), vals.dtype)
+    s = s.at[jnp.arange(c)[:, None], idx].add(vals)
+    return (spec.d_block / spec.k) * s
+
+
+CODEC = base.Codec(encode=encode, decode=decode, self_decode=self_decode)
 base.register("rand_k", CODEC)

@@ -25,7 +25,7 @@ def encode(spec, key, client_id, x_cd):
 def _rho(spec, n, payloads, s, m):
     if spec.r_mode != "est":
         return transforms.rho_for(spec.transform, n, spec.r_value)
-    # Online R-hat from unbiased per-client decodes (DESIGN.md §5):
+    # Online R-hat from unbiased per-client decodes (docs/DESIGN.md §5):
     #   sum_{i != l} <xh_i, xh_l> = ||sum_i xh_i||^2 - sum_i ||xh_i||^2,
     # with xh_i = (d/k) scatter(vals_i) and exact ||x_i||^2 side info.
     d, k = spec.d_block, spec.k
@@ -38,8 +38,8 @@ def _rho(spec, n, payloads, s, m):
     return transforms.clip_rho(r_hat / (n - 1.0), n)
 
 
-def decode(spec, key, payloads, n):
-    s, m = rand_k.scatter_sum_and_counts(spec, key, payloads["vals"], n)
+def decode(spec, key, payloads, n, client_ids=None):
+    s, m = rand_k.scatter_sum_and_counts(spec, key, payloads["vals"], n, client_ids)
     rho = _rho(spec, n, payloads, s, m)
     b = beta_lib.rand_k_spatial_beta(n, spec.k, spec.d_block, rho)
     t = transforms.t_apply(m, rho)
@@ -47,5 +47,6 @@ def decode(spec, key, payloads, n):
     return (b / n) * scaled
 
 
-CODEC = base.Codec(encode=encode, decode=decode)
+# Encoding is Rand-k's, so the unbiased per-client reconstruction is too.
+CODEC = base.Codec(encode=encode, decode=decode, self_decode=rand_k.self_decode)
 base.register("rand_k_spatial", CODEC)

@@ -8,7 +8,7 @@ Two decode paths (tests assert they agree to float tolerance):
 
 - ``direct``  — the paper-literal algorithm: materialise S (d x d), eigh,
   apply T to the spectrum. O(d^2 nk). Kept as the faithful oracle.
-- ``gram``    — our TPU adaptation (DESIGN.md §3.3): with A = [G_1; ...; G_n]
+- ``gram``    — our TPU adaptation (docs/DESIGN.md §3.3): with A = [G_1; ...; G_n]
   (nk x d) and z = concat of received payloads, S = A^T A and
 
       x_hat = (beta/n) * A^T U diag(1_{l>0} / T(l)) U^T z,
@@ -95,8 +95,10 @@ def encode(spec, key, client_id, x_cd):
     return out
 
 
-def _stack_a(spec, key, n, chunk_id=None):
-    """A = [G_1; ...; G_n] (nk, d) re-derived from the round key."""
+def _stack_a(spec, key, n, chunk_id=None, client_ids=None):
+    """A = [G_1; ...; G_n] (nk, d) re-derived from the round key.
+
+    ``client_ids`` selects which clients' maps to stack (participants)."""
 
     def one(i):
         ckey = base.client_key(key, i)
@@ -104,12 +106,13 @@ def _stack_a(spec, key, n, chunk_id=None):
             ckey = base.chunk_key(ckey, chunk_id)
         return _g_matrix(spec, _client_draw(spec, ckey))
 
-    mats = jax.vmap(one)(jnp.arange(n))  # (n, k, d)
+    ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
+    mats = jax.vmap(one)(ids)  # (n, k, d)
     return mats.reshape(n * spec.k, spec.d_block)
 
 
 def _rho_hat(spec, n, z, gram, norm_sq):
-    """Per-chunk online R-hat (DESIGN.md §5). z: (C, n, k); gram: (nk, nk)."""
+    """Per-chunk online R-hat (docs/DESIGN.md §5). z: (C, n, k); gram: (nk, nk)."""
     d, k = spec.d_block, spec.k
     scale = d / k
     zf = z.reshape(z.shape[0], n * k)
@@ -187,19 +190,19 @@ def _decode_one_direct(spec, n, a, z, norm_sq):
     return scale * xh
 
 
-def decode(spec, key, payloads, n):
+def decode(spec, key, payloads, n, client_ids=None):
     vals = payloads["vals"]  # (n, C, k)
     norm_sq = payloads.get("norm_sq")  # (n, C) or None
     z = jnp.moveaxis(vals, 0, 1).astype(jnp.float32)  # (C, n, k)
     dec = _decode_one_gram if spec.decode_method == "gram" else _decode_one_direct
     if spec.shared_randomness:
-        a = _stack_a(spec, key, n)
+        a = _stack_a(spec, key, n, client_ids=client_ids)
         return dec(spec, n, a, z, norm_sq)
 
     c = vals.shape[1]
 
     def per_chunk(chunk_id, z_c, nsq_c):
-        a = _stack_a(spec, key, n, chunk_id)
+        a = _stack_a(spec, key, n, chunk_id, client_ids=client_ids)
         nsq = None if norm_sq is None else nsq_c[:, None]
         return dec(spec, n, a, z_c[None], nsq)[0]
 
@@ -207,5 +210,25 @@ def decode(spec, key, payloads, n):
     return jax.vmap(per_chunk)(jnp.arange(c), z, nsq_arg)
 
 
-CODEC = base.Codec(encode=encode, decode=decode)
+def self_decode(spec, key, client_id, payload):
+    """Unbiased per-client reconstruction (d/k) G_i^T z_i.
+
+    E[G^T G] = (k/d) I for all three projections (SRHT, subsample, gauss), so
+    this is the client's unbiased contribution as the server sees it. With
+    projection="subsample" it equals Rand-k's (d/k) scatter bit-for-bit
+    (Lemma 4.1), so error feedback composes identically across the pair.
+    """
+    ckey = base.client_key(key, client_id)
+    vals = payload["vals"].astype(jnp.float32)  # (C, k)
+    scale = spec.d_block / spec.k
+    if spec.shared_randomness:
+        g = _g_matrix(spec, _client_draw(spec, ckey))  # (k, d)
+        return scale * (vals @ g)
+    c = vals.shape[0]
+    keys = jax.vmap(base.chunk_key, in_axes=(None, 0))(ckey, jnp.arange(c))
+    gs = jax.vmap(lambda kk: _g_matrix(spec, _client_draw(spec, kk)))(keys)
+    return scale * jnp.einsum("ck,ckd->cd", vals, gs)
+
+
+CODEC = base.Codec(encode=encode, decode=decode, self_decode=self_decode)
 base.register("rand_proj_spatial", CODEC)

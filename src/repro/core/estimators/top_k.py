@@ -27,7 +27,7 @@ def scatter_mean(vals, idx, n, d):
     return jax.vmap(one)(vals, idx).sum(0) / n
 
 
-def decode(spec, key, payloads, n):
+def decode(spec, key, payloads, n, client_ids=None):
     return scatter_mean(payloads["vals"], payloads["idx"], n, spec.d_block)
 
 

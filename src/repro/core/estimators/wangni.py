@@ -66,7 +66,7 @@ def encode(spec, key, client_id, x_cd):
     return {"vals": vals, "idx": idx}
 
 
-def decode(spec, key, payloads, n):
+def decode(spec, key, payloads, n, client_ids=None):
     return top_k.scatter_mean(payloads["vals"], payloads["idx"], n, spec.d_block)
 
 

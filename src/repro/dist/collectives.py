@@ -17,7 +17,16 @@ point of the estimator), and every shard decodes the identical mean.
 Error feedback (``spec.ef``): residual buffers are (n_clients, C, d_block)
 chunk arrays threaded by the caller (train_state["ef"]); the residual is
 rebuilt from the codec's self-decode so its support is exactly the
-untransmitted coordinates.
+untransmitted coordinates. On the shard_map path each residual row lives with
+its client's shard (P(client_axes, None, None)) — no residual state ever
+crosses the wire.
+
+Partial participation (``participants``): a concrete (host-side) index array
+naming the clients that actually report this round (repro.fl samples these).
+Only participants encode/transmit; the decode re-derives THEIR randomness via
+``client_ids`` and normalises by the actual participant count — never by the
+sampled count (straggler renormalisation). Non-participants' EF residuals
+carry over unchanged.
 """
 from __future__ import annotations
 
@@ -75,7 +84,7 @@ def _chunk_clients(tree, d_block: int):
     return chunks, restore, n
 
 
-def _payload_nbytes_per_client(payloads) -> int:
+def payload_nbytes_per_client(payloads) -> int:
     """Exact wire bytes per client from the (static) payload shapes/dtypes.
 
     Payload leaves are stacked with a leading client axis; indices derived
@@ -88,10 +97,12 @@ def _payload_nbytes_per_client(payloads) -> int:
     return total
 
 
-def _info(spec, n: int, d_flat: int, n_chunks: int, payloads) -> dict:
-    per_client = _payload_nbytes_per_client(payloads)
+def _info(spec, n: int, d_flat: int, n_chunks: int, payloads,
+          n_total: int | None = None) -> dict:
+    per_client = payload_nbytes_per_client(payloads)
     return {
         "n_clients": n,
+        "n_total": n if n_total is None else n_total,  # rows in the input tree
         "n_chunks": n_chunks,
         "d_flat": d_flat,
         "d_block": spec.d_block,
@@ -101,43 +112,71 @@ def _info(spec, n: int, d_flat: int, n_chunks: int, payloads) -> dict:
     }
 
 
-def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None):
+def _participant_ids(participants, n_total: int) -> np.ndarray:
+    """Normalise a participation mask/index list to a concrete id array."""
+    p = np.asarray(participants)
+    if p.dtype == bool:
+        p = np.flatnonzero(p)
+    if p.size == 0:
+        raise ValueError("participation mask selects zero clients")
+    if p.max() >= n_total or p.min() < 0:
+        raise ValueError(f"participant id out of range [0, {n_total})")
+    return p.astype(np.int32)
+
+
+def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
+                         participants=None):
     """Cross-client compressed mean of a pytree.
 
     tree leaves: (n_clients, ...). Returns (mean_tree, info, ef_next) where
     mean_tree drops the client axis, info is static byte/payload accounting,
     and ef_next is the updated (n, C, d_block) residual (None unless spec.ef).
+
+    ``participants``: concrete index array / bool mask of reporting clients.
+    Only they encode; decode uses their actual client ids and n = how many
+    actually reported. ef_next keeps the FULL (n_clients, ...) shape — rows of
+    non-participants carry over unchanged.
     """
-    chunks, restore, n = _chunk_clients(tree, spec.d_block)
+    chunks, restore, n_total = _chunk_clients(tree, spec.d_block)
+    if participants is None:
+        ids = None
+        part_chunks, n = chunks, n_total
+    else:
+        ids = _participant_ids(participants, n_total)
+        part_chunks, n = chunks[ids], len(ids)
     if shardings is not None:
-        chunks = shardings.constrain(chunks)
-    x = chunks
+        part_chunks = shardings.constrain(part_chunks)
+    x = part_chunks
     if spec.ef:
         if ef_chunks is None:
             ef_chunks = jnp.zeros_like(chunks)
-        x = chunks + ef_chunks
+        x = part_chunks + (ef_chunks if ids is None else ef_chunks[ids])
 
-    payloads = est_base.encode_all(spec, key, x)
+    payloads = est_base.encode_all(spec, key, x, client_ids=ids)
     if shardings is not None:
         payloads = shardings.constrain_tree(payloads)
-    mean_chunks = est_base.decode(spec, key, payloads, n)
+    mean_chunks = est_base.decode(spec, key, payloads, n, client_ids=ids)
     mean_tree = restore(mean_chunks)
 
     ef_next = None
     if spec.ef:
+        id_arr = jnp.arange(n) if ids is None else jnp.asarray(ids)
         self_dec = jax.vmap(
             lambda i, p: est_base.self_decode(spec, key, i, p)
-        )(jnp.arange(n), payloads)
-        ef_next = x - self_dec
+        )(id_arr, payloads)
+        resid = x - self_dec
+        ef_next = resid if ids is None else ef_chunks.at[jnp.asarray(ids)].set(resid)
 
     d_flat = sum(
         int(np.prod(leaf.shape[1:], dtype=np.int64)) for leaf in jax.tree.leaves(tree)
     )
-    return mean_tree, _info(spec, n, d_flat, chunks.shape[1], payloads), ef_next
+    return mean_tree, _info(spec, n, d_flat, chunks.shape[1], payloads,
+                            n_total=n_total), ef_next
 
 
 def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
-                                  client_axes=("pod",)):
+                                  client_axes=("pod",), ef_chunks=None,
+                                  participants=None):
     """Explicit-collective compressed mean via shard_map.
 
     grads leaves: (n_clients, ...) with the client axis sharded over
@@ -145,8 +184,19 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
     are all-gathered across the client axes (the only payload-sized cross-
     client traffic), and every shard runs the identical server decode.
     Requires n_clients divisible by the client-axes extent; falls back to the
-    GSPMD path otherwise. EF is not supported here (train_step routes
-    spec.ef=True through the GSPMD path).
+    GSPMD path otherwise.
+
+    Error feedback (spec.ef): ``ef_chunks`` (n, C, d_block) is sharded over
+    the client axis, so each residual row lives with its client's shard and
+    never crosses the wire; the updated residual returns with the same
+    sharding. Parity with the GSPMD path is asserted by
+    tests/test_error_feedback.py.
+
+    ``participants``: concrete ids/mask of reporting clients. Every shard
+    still encodes all its local clients (static shapes), but only the
+    participants' payloads enter the decode (static gather on the replicated
+    payload stack, with their actual client ids) and only their residual rows
+    update.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -155,11 +205,19 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
     n_shards = 1
     for a in client_axes:
         n_shards *= mesh.shape[a]
-    if not client_axes or n % n_shards != 0 or spec.ef:
+    if not client_axes or n % n_shards != 0:
         return compressed_mean_tree(
-            spec, key, grads, dme_shardings(mesh, client_axes)
+            spec, key, grads, dme_shardings(mesh, client_axes),
+            ef_chunks=ef_chunks, participants=participants,
         )
     n_local = n // n_shards
+
+    part_ids = None if participants is None else _participant_ids(participants, n)
+    n_eff = n if part_ids is None else len(part_ids)
+    part_mask = np.ones(n, bool)
+    if part_ids is not None:
+        part_mask = np.zeros(n, bool)
+        part_mask[part_ids] = True
 
     template = _client_slice(grads, 0)
     _, restore = chunking.tree_chunk(template, spec.d_block)
@@ -167,8 +225,11 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
         int(np.prod(leaf.shape[1:], dtype=np.int64)) for leaf in jax.tree.leaves(grads)
     )
     n_chunks = chunking.num_chunks(d_flat, spec.d_block)
+    if spec.ef and ef_chunks is None:
+        ef_chunks = jnp.zeros((n, n_chunks, spec.d_block), jnp.float32)
+    use_ef = spec.ef
 
-    def local_fn(key, g_local):
+    def local_fn(key, g_local, ef_local):
         shard_idx = jnp.zeros((), jnp.int32)
         for a in client_axes:
             shard_idx = shard_idx * mesh.shape[a] + jax.lax.axis_index(a)
@@ -176,27 +237,52 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
         chunks = jax.vmap(
             lambda i: chunking.tree_chunk(_client_slice(g_local, i), spec.d_block)[0]
         )(jnp.arange(n_local))
+        x = chunks + ef_local if use_ef else chunks
         payloads = jax.vmap(
             lambda i, c: est_base.encode(spec, key, i, c)
-        )(ids, chunks)
+        )(ids, x)
         gathered = jax.tree.map(
             lambda leaf: jax.lax.all_gather(leaf, client_axes, axis=0, tiled=True),
             payloads,
         )
-        mean_chunks = est_base.decode(spec, key, gathered, n)
-        return restore(mean_chunks)
+        if part_ids is None:
+            mean_chunks = est_base.decode(spec, key, gathered, n)
+        else:
+            selected = jax.tree.map(lambda leaf: leaf[part_ids], gathered)
+            mean_chunks = est_base.decode(
+                spec, key, selected, n_eff, client_ids=part_ids
+            )
+        if not use_ef:
+            return restore(mean_chunks), ef_local
+        # residual update stays on the client's shard; non-participants keep
+        # their residual (they did not transmit this round)
+        self_dec = jax.vmap(
+            lambda i, p: est_base.self_decode(spec, key, i, p)
+        )(ids, payloads)
+        resid = x - self_dec
+        local_part = jnp.take(jnp.asarray(part_mask), ids)
+        ef_next = jnp.where(local_part[:, None, None], resid, ef_local)
+        return restore(mean_chunks), ef_next
 
+    if ef_chunks is None:  # dummy carried buffer keeps one code path
+        ef_chunks = jnp.zeros((n, 1, 1), jnp.float32)
+    client_spec = P(client_axes, None, None)
     in_specs = (
         P(),
         jax.tree.map(lambda leaf: P(client_axes, *([None] * (leaf.ndim - 1))), grads),
+        client_spec,
     )
-    out_specs = jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)), template)
-    mean_tree = shard_map(
-        local_fn, mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
-    )(key, grads)
+    mean_specs = jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)), template)
+    mean_tree, ef_next = shard_map(
+        local_fn, mesh, in_specs=in_specs, out_specs=(mean_specs, client_spec),
+        check_rep=False,
+    )(key, grads, ef_chunks)
+    if not use_ef:
+        ef_next = None
 
     pay_abs = jax.eval_shape(
         lambda c: est_base.encode_all(spec, jax.random.key(0), c),
-        jax.ShapeDtypeStruct((n, n_chunks, spec.d_block), jnp.float32),
+        jax.ShapeDtypeStruct((n_eff, n_chunks, spec.d_block), jnp.float32),
     )
-    return mean_tree, _info(spec, n, d_flat, n_chunks, pay_abs), None
+    return mean_tree, _info(spec, n_eff, d_flat, n_chunks, pay_abs,
+                            n_total=n), ef_next

@@ -5,7 +5,7 @@ One rule, applied uniformly from the single structural source of truth
 ``spec_for`` maps logical axes to mesh axes with divisibility checks —
 a non-divisible dimension falls through to replication instead of forcing
 GSPMD to pad (padding shows up as rematerialisation all-gathers every layer;
-see EXPERIMENTS §Perf).
+see docs/EXPERIMENTS.md §Roofline).
 
 Placement policy:
     - the "model" mesh axis goes to the first axis of ``model_pref`` present

@@ -1,0 +1,315 @@
+"""Paper §5 task library: each task is a pure ``(state, mean) -> state`` step.
+
+A ``Task`` cleanly separates the three things a federated round needs:
+
+    client_vectors(state, key) -> (n, dim)   what each client WOULD send
+    step(state, mean)          -> state      how the server's model advances
+    metric(state)              -> float      task-level error (lower = better)
+
+so any task composes with any estimator, any cohort, and either decode mode
+(spatial / temporal) — the round driver (fl.rounds) owns everything between
+"clients computed vectors" and "server obtained a mean".
+
+Tasks
+-----
+- ``power_iteration``   distributed power iteration (paper Fig. 4 top)
+- ``kmeans``            distributed k-means centroid averaging
+- ``linear_regression`` distributed GD on least squares
+- ``logistic_regression`` softmax regression on gaussian class blobs
+- ``dme``               pure one-shot mean estimation, correlation rho dialed
+                        in exactly (x_i = u + sigma * eps_i with
+                        sigma^2 = 1/rho - 1 => E[R] ~= rho (n-1))
+- ``drift``             slowly-rotating common component: the temporal
+                        decoder's showcase (x_i(t) = u(t) + noise, u drifts
+                        by ~omega per round)
+
+Datasets are offline synthetic stand-ins with the paper's shapes (image-like
+low-rank + class structure); non-IID splits use fl.clients.partition
+("band" = label-sorted shards per paper App. D, "dirichlet" = Dir(alpha)
+mixtures).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import clients as clients_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    name: str
+    n_clients: int
+    dim: int
+    init: Callable[[Any], dict]                 # key -> state
+    client_vectors: Callable[[dict, Any], jnp.ndarray]  # (state, key) -> (n, dim)
+    step: Callable[[dict, jnp.ndarray], dict]   # (state, mean) -> state
+    metric: Callable[[dict], float] | None = None
+    metric_name: str = "err"
+    aux: dict = dataclasses.field(default_factory=dict)
+
+
+def _image_like_data(n_samples, d, seed=0, n_classes=10):
+    """Low-rank + class-structured features (Fashion-MNIST-like moments)."""
+    rng = np.random.default_rng(seed)
+    rank = 16
+    basis = rng.standard_normal((rank, d)) * (1.0 / np.sqrt(d))
+    scale = np.geomspace(3.0, 0.3, rank)[:, None]
+    z = rng.standard_normal((n_samples, rank))
+    labels = rng.integers(0, n_classes, n_samples)
+    cls_shift = rng.standard_normal((n_classes, d)) * 0.4 / np.sqrt(d)
+    x = z @ (basis * scale) + cls_shift[labels]
+    x = x + rng.standard_normal((n_samples, d)) * 0.05
+    return x.astype(np.float32), labels
+
+
+def power_iteration(
+    n_clients=10, d=1024, samples=4000, scheme="iid", alpha=0.3, seed=0
+) -> Task:
+    x, labels = _image_like_data(samples, d, seed=seed)
+    shards = jnp.asarray(
+        clients_lib.partition(x, labels, n_clients, scheme, alpha, seed)
+    )  # (n, m, d)
+    v_top = np.linalg.eigh(x.T @ x / len(x))[1][:, -1]
+
+    def init(key):
+        return {"t": 0, "v": jnp.ones(d) / jnp.sqrt(d)}
+
+    @jax.jit
+    def client_vectors(state, key):
+        local = jnp.einsum("nmd,d->nm", shards, state["v"])
+        vi = jnp.einsum("nmd,nm->nd", shards, local)
+        return vi / (jnp.linalg.norm(vi, axis=1, keepdims=True) + 1e-9)
+
+    def step(state, mean):
+        v = mean / (jnp.linalg.norm(mean) + 1e-9)
+        return {"t": state["t"] + 1, "v": v}
+
+    def metric(state):
+        v = np.asarray(state["v"])
+        return float(min(np.linalg.norm(v - v_top), np.linalg.norm(v + v_top)))
+
+    return Task(
+        name="power_iteration", n_clients=n_clients, dim=d, init=init,
+        client_vectors=client_vectors, step=step, metric=metric,
+        metric_name="eig_err", aux={"v_top": v_top, "shards": shards},
+    )
+
+
+def kmeans(
+    n_clients=10, d=256, samples=4000, n_clusters=10, scheme="iid", alpha=0.3,
+    seed=2,
+) -> Task:
+    x, labels = _image_like_data(samples, d, seed=seed, n_classes=n_clusters)
+    shards = jnp.asarray(
+        clients_lib.partition(x, labels, n_clients, scheme, alpha, seed)
+    )
+    x_all = jnp.asarray(x)
+    init_cents = jnp.asarray(x[:: samples // n_clusters][:n_clusters])
+
+    def init(key):
+        return {"t": 0, "cents": init_cents}
+
+    @jax.jit
+    def client_vectors(state, key):
+        cents = state["cents"]
+        d2 = ((shards[:, :, None, :] - cents[None, None]) ** 2).sum(-1)
+        oh = jax.nn.one_hot(jnp.argmin(d2, -1), n_clusters, dtype=jnp.float32)
+        sums = jnp.einsum("nmc,nmd->ncd", oh, shards)
+        cnts = jnp.maximum(oh.sum(1)[..., None], 1.0)
+        local = jnp.where(oh.sum(1)[..., None] > 0, sums / cnts, cents[None])
+        return local.reshape(n_clients, n_clusters * d)
+
+    def step(state, mean):
+        return {"t": state["t"] + 1, "cents": mean.reshape(n_clusters, d)}
+
+    @jax.jit
+    def _loss(cents):
+        d2 = ((x_all[:, None, :] - cents[None]) ** 2).sum(-1)
+        return d2.min(-1).mean()
+
+    def metric(state):
+        return float(_loss(state["cents"]))
+
+    return Task(
+        name="kmeans", n_clients=n_clients, dim=n_clusters * d, init=init,
+        client_vectors=client_vectors, step=step, metric=metric,
+        metric_name="quant_loss", aux={"shards": shards},
+    )
+
+
+def linear_regression(
+    n_clients=10, d=512, samples=4000, lr=0.05, scheme="iid", alpha=0.3, seed=3
+) -> Task:
+    rng = np.random.default_rng(seed)
+    w_star = rng.standard_normal(d).astype(np.float32) / np.sqrt(d)
+    x, labels = _image_like_data(samples, d, seed=seed + 1)
+    y = x @ w_star + rng.standard_normal(samples).astype(np.float32) * 0.01
+    order_key = y if scheme == "band" else labels  # band-sort by target value
+    xs = jnp.asarray(clients_lib.partition(x, order_key, n_clients, scheme, alpha, seed))
+    ys = jnp.asarray(clients_lib.partition(y, order_key, n_clients, scheme, alpha, seed))
+
+    def init(key):
+        return {"t": 0, "w": jnp.zeros(d)}
+
+    @jax.jit
+    def client_vectors(state, key):
+        pred = jnp.einsum("nmd,d->nm", xs, state["w"])
+        return 2 * jnp.einsum("nmd,nm->nd", xs, pred - ys) / xs.shape[1]
+
+    def step(state, mean):
+        return {"t": state["t"] + 1, "w": state["w"] - lr * mean}
+
+    @jax.jit
+    def _loss(w):
+        pred = jnp.einsum("nmd,d->nm", xs, w)
+        return ((pred - ys) ** 2).mean()
+
+    def metric(state):
+        return float(_loss(state["w"]))
+
+    return Task(
+        name="linear_regression", n_clients=n_clients, dim=d, init=init,
+        client_vectors=client_vectors, step=step, metric=metric,
+        metric_name="mse_loss", aux={"w_star": w_star},
+    )
+
+
+def logistic_regression(
+    n_clients=10, feat=64, n_classes=10, samples=4000, lr=0.5,
+    scheme="dirichlet", alpha=0.3, seed=5,
+) -> Task:
+    """Softmax regression on gaussian class blobs; Dirichlet non-IID default."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_classes, feat)).astype(np.float32)
+    labels = rng.integers(0, n_classes, samples)
+    x = centers[labels] + 0.8 * rng.standard_normal((samples, feat)).astype(np.float32)
+    xs = jnp.asarray(clients_lib.partition(x, labels, n_clients, scheme, alpha, seed))
+    ys = jnp.asarray(clients_lib.partition(labels, labels, n_clients, scheme, alpha, seed))
+    x_all, y_all = jnp.asarray(x), jnp.asarray(labels)
+    dim = n_classes * feat
+
+    def _grads(w_flat, xb, yb):
+        w = w_flat.reshape(n_classes, feat)
+        logits = xb @ w.T
+        p = jax.nn.softmax(logits, axis=-1)
+        oh = jax.nn.one_hot(yb, n_classes, dtype=jnp.float32)
+        return ((p - oh).T @ xb / xb.shape[0]).reshape(-1)
+
+    def init(key):
+        return {"t": 0, "w": jnp.zeros(dim)}
+
+    @jax.jit
+    def client_vectors(state, key):
+        return jax.vmap(lambda xb, yb: _grads(state["w"], xb, yb))(xs, ys)
+
+    def step(state, mean):
+        return {"t": state["t"] + 1, "w": state["w"] - lr * mean}
+
+    @jax.jit
+    def _eval(w_flat):
+        logits = x_all @ w_flat.reshape(n_classes, feat).T
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y_all[:, None], axis=-1).mean()
+        acc = (jnp.argmax(logits, -1) == y_all).mean()
+        return nll, acc
+
+    def metric(state):
+        return float(_eval(state["w"])[0])
+
+    def accuracy(state):
+        return float(_eval(state["w"])[1])
+
+    return Task(
+        name="logistic_regression", n_clients=n_clients, dim=dim, init=init,
+        client_vectors=client_vectors, step=step, metric=metric,
+        metric_name="xent", aux={"accuracy": accuracy},
+    )
+
+
+def dme(n_clients=8, d=256, rho=0.9, seed=0) -> Task:
+    """Static correlated mean estimation: E[R] ~= rho * (n - 1).
+
+    x_i = u + sigma eps_i with ||u|| = 1, eps_i ~ N(0, I/d), and
+    sigma = sqrt(1/rho - 1):  R = n<u,u>/(<u,u> + sigma^2) ... = rho (n-1).
+    client_vectors is constant across rounds, so averaging the per-round MSE
+    over many rounds Monte-Carlo-averages over the estimator's randomness —
+    this is the harness' Fig. 3/4-style MSE-at-equal-bytes probe.
+    """
+    rng = np.random.default_rng(seed)
+    u = rng.standard_normal(d)
+    u /= np.linalg.norm(u)
+    sigma = np.sqrt(1.0 / rho - 1.0) if rho > 0 else 10.0
+    eps = rng.standard_normal((n_clients, d)) / np.sqrt(d)
+    xs = jnp.asarray(u[None] + sigma * eps, jnp.float32)
+
+    def init(key):
+        return {"t": 0, "mean": jnp.zeros(d)}
+
+    def client_vectors(state, key):
+        return xs
+
+    def step(state, mean):
+        return {"t": state["t"] + 1, "mean": mean}
+
+    return Task(
+        name="dme", n_clients=n_clients, dim=d, init=init,
+        client_vectors=client_vectors, step=step, metric=None,
+        metric_name="mse", aux={"xs": xs, "rho": rho},
+    )
+
+
+def drift(n_clients=8, d=256, rho=0.95, omega=0.03, seed=0) -> Task:
+    """Slowly-drifting common component: u(t) rotates by ~omega rad/round.
+
+    Per-round ||u(t) - u(t-1)|| ~= omega << 1 = ||u(t)||, so a temporal
+    decoder that encodes deltas against the server's previous estimate spends
+    its k on a vector ~1/omega times smaller — the Rand-k-Temporal argument.
+    Fresh per-round client noise keeps the task honest (the delta is never 0).
+    """
+    rng = np.random.default_rng(seed)
+    u0 = rng.standard_normal(d)
+    u0 /= np.linalg.norm(u0)
+    u1 = rng.standard_normal(d)
+    u1 -= u0 * (u0 @ u1)
+    u1 /= np.linalg.norm(u1)
+    u0_j, u1_j = jnp.asarray(u0, jnp.float32), jnp.asarray(u1, jnp.float32)
+    sigma = float(np.sqrt(1.0 / rho - 1.0)) if rho > 0 else 10.0
+
+    def init(key):
+        return {"t": 0, "mean": jnp.zeros(d)}
+
+    def client_vectors(state, key):
+        t = state["t"]
+        u_t = jnp.cos(omega * t) * u0_j + jnp.sin(omega * t) * u1_j
+        eps = jax.random.normal(key, (n_clients, d)) / jnp.sqrt(d)
+        return u_t[None] + sigma * eps
+
+    def step(state, mean):
+        return {"t": state["t"] + 1, "mean": mean}
+
+    return Task(
+        name="drift", n_clients=n_clients, dim=d, init=init,
+        client_vectors=client_vectors, step=step, metric=None,
+        metric_name="mse", aux={"rho": rho, "omega": omega},
+    )
+
+
+TASKS: dict[str, Callable[..., Task]] = {
+    "power_iteration": power_iteration,
+    "kmeans": kmeans,
+    "linear_regression": linear_regression,
+    "logistic_regression": logistic_regression,
+    "dme": dme,
+    "drift": drift,
+}
+
+
+def get_task(name: str, **kw) -> Task:
+    if name not in TASKS:
+        raise KeyError(f"unknown task {name!r}; have {sorted(TASKS)}")
+    return TASKS[name](**kw)

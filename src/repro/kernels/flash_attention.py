@@ -1,6 +1,6 @@
 """Pallas TPU kernel: flash attention (tiled online-softmax).
 
-Motivation (EXPERIMENTS.md §Roofline): the memory term of every attention
+Motivation (docs/EXPERIMENTS.md §Roofline): the memory term of every attention
 arch is dominated by the materialised (tokens x S x heads) score tensor —
 XLA cannot keep it in VMEM across the matmul -> softmax -> matmul boundary,
 and the pure-JAX kv-block scan still round-trips the f32 accumulator

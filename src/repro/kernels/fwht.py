@@ -4,7 +4,7 @@ This is the compute hot-spot of the paper's SRHT encoding/decoding
 (G_i = (1/sqrt(d)) E_i H D_i): every encode applies ``H @ (D_i x)`` and every
 decode applies ``H @ scatter(payload)``.
 
-TPU adaptation (see DESIGN.md §3.2): instead of the classic log2(d)-stage
+TPU adaptation (see docs/DESIGN.md §3.2): instead of the classic log2(d)-stage
 butterfly (VPU add/sub, memory-bound, one HBM round-trip per stage under XLA
 fusion limits) we use the Kronecker factorisation of the Sylvester Hadamard
 matrix

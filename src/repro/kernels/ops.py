@@ -131,7 +131,7 @@ def flash_attention(q, k, v, *, rep: int, window: int = 0, q_offset: int = 0,
 def srht_rows_matrix(signs: jnp.ndarray, rows: jnp.ndarray, d: int) -> jnp.ndarray:
     """Materialise G = (1/sqrt(d)) E H D as a (k, d) matrix.
 
-    Used by the Gram-trick decode (DESIGN.md §3.3) where A = stack(G_i) is
+    Used by the Gram-trick decode (docs/DESIGN.md §3.3) where A = stack(G_i) is
     fed to MXU matmuls. Row r of E H D is H[rows[r], :] * signs.
     """
     h = jnp.asarray(_ref.hadamard_matrix(d), jnp.float32)

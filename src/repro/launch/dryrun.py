@@ -14,7 +14,7 @@ os.environ["XLA_FLAGS"] = (
 #
 # Cells are cached as JSON (skip if present unless --force): the full 40-cell
 # sweep is resumable and composes with benchmarks/roofline.py, which renders
-# EXPERIMENTS.md tables from the same JSON.
+# docs/EXPERIMENTS.md tables from the same JSON.
 
 import argparse
 import json
@@ -184,7 +184,7 @@ def run_calibration(arch, shape_name, multi_pod, dme, knobs=None) -> dict:
     """Two-point block-count calibration: compile at n_blocks in {1, 2} with
     all loops unrolled (no HLO whiles -> exact cost_analysis + collective
     parse), then affine-extrapolate f(nb) = a + b*nb to the full depth.
-    Needed because XLA cost analysis counts while bodies ONCE (EXPERIMENTS.md
+    Needed because XLA cost analysis counts while bodies ONCE (docs/EXPERIMENTS.md
     §Dry-run, methodology)."""
     knobs = dict(knobs or {})
     cfg = configs.get_config(arch)

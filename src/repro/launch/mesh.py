@@ -16,7 +16,7 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return jax.make_mesh(shape, axes)
 
 
-# TPU v5e hardware constants for the roofline model (EXPERIMENTS.md §Roofline)
+# TPU v5e hardware constants for the roofline model (docs/EXPERIMENTS.md §Roofline)
 PEAK_FLOPS_BF16 = 197e12      # per chip
 HBM_BW = 819e9                # bytes/s per chip
 ICI_BW = 50e9                 # bytes/s per link

@@ -25,7 +25,7 @@ def _sds(shape, dtype, ns: NamedSharding):
 def supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
     info = SHAPES[shape_name]
     if shape_name == "long_500k" and not cfg.supports_long_context:
-        return False, "pure full-attention arch: 500k decode skipped (DESIGN.md §6)"
+        return False, "pure full-attention arch: 500k decode skipped (docs/DESIGN.md §6)"
     if info["kind"] == "train" and cfg.input_mode == "embeddings":
         # VLM backbone trains on embeddings; still supported (stub frontend)
         return True, ""

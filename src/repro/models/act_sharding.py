@@ -1,6 +1,6 @@
 """Activation sharding constraint hook.
 
-§Perf finding (EXPERIMENTS H-c iteration 2): with constraints only on the
+§Perf finding (docs/EXPERIMENTS.md, H-c iteration 2): with constraints only on the
 batch INPUTS, GSPMD propagated a batch-replicated / d_model-sharded layout
 from the embedding gather through every layer — global-batch-sized f32
 all-reduces per block (2x2.1GB/device) and redundant logits compute. The

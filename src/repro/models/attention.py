@@ -2,7 +2,7 @@
 single-token decode. Supports causal masking, sliding windows, QKV bias and
 ring-buffer KV caches with explicit stored positions.
 
-Memory note (DESIGN.md / EXPERIMENTS §Perf): the kv-block online-softmax scan
+Memory note (docs/DESIGN.md / EXPERIMENTS §Perf): the kv-block online-softmax scan
 bounds the live score tensor to (B, Sq, H, kv_block) instead of
 (B, Sq, H, Sk) — the difference between 8.6 GB and 0.27 GB per device at
 prefill_32k scale.

@@ -55,7 +55,7 @@ class ModelConfig:
     mamba_headdim: int = 64
     mamba_ngroups: int = 1
     mamba_chunk: int = 256
-    # perf knob (EXPERIMENTS §Perf H-a): split the fused in_proj into
+    # perf knob (docs/EXPERIMENTS.md §Perf H-a): split the fused in_proj into
     # separate z/x/BC/dt projections so the big z/x output dims are
     # TP-divisible (the fused width 2*di+2gN+nh generally is not) — pure
     # layout change, functionally identical.
@@ -74,14 +74,14 @@ class ModelConfig:
     force_unroll: bool = False
     attn_kv_block: int = 1024            # flash-style kv chunk for train/prefill
     attn_impl: Literal["blocked", "flash"] = "blocked"  # flash = Pallas kernel
-    # perf knob (EXPERIMENTS §Perf): materialise GQA as MHA activations
+    # perf knob (docs/EXPERIMENTS.md §Perf): materialise GQA as MHA activations
     # (repeat kv heads to n_heads right after projection). Bit-identical
     # outputs; makes the kv activation head-dim TP-divisible when
     # n_kv_heads < model-axis size (kv=8 on a 16-way axis otherwise forces
     # GSPMD rematerialisation all-gathers every layer).
     gqa_repeat_kv: bool = False
     vocab_pad_multiple: int = 256
-    # which shapes this arch supports (DESIGN.md §6)
+    # which shapes this arch supports (docs/DESIGN.md §6)
     supports_long_context: bool = False  # sub-quadratic (SSM/hybrid/SWA)
 
     # ------------------------------------------------------------- derived

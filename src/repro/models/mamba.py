@@ -8,7 +8,7 @@ chunk the recurrence is materialised as a decay-masked attention-like matmul
 Layout: in_proj -> [z (gate), x, B, C, dt]; short causal conv over (x,B,C);
 SSD; gated RMSNorm; out_proj. Jamba's Mamba-1 layers are realised with this
 SSD block (state=16, heads=d_inner/headdim) — a documented simplification
-(DESIGN.md §7): identical interface, shapes and asymptotics.
+(docs/DESIGN.md §7): identical interface, shapes and asymptotics.
 """
 from __future__ import annotations
 

@@ -1,7 +1,7 @@
 """Serving steps: prefill (builds cache) and single-token decode.
 
 The paper's technique targets gradient aggregation, so serve steps carry no
-DME compression (noted per-cell in EXPERIMENTS.md). The decode step with a
+DME compression (noted per-cell in docs/EXPERIMENTS.md). The decode step with a
 sequence-sharded cache relies on GSPMD partitioning the softmax reductions
 over the sharded KV length (partial max/sum + all-reduce — flash-decode
 combine without hand-written collectives).

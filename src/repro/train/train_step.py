@@ -60,9 +60,9 @@ def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
         return plain_step
 
     # shard_map path: local chunking, payload-only cross-client traffic
-    # (§Perf H-c). gspmd path kept as the measured baseline.
-    use_shardmap = mesh is not None and dme_impl in ("auto", "shard_map") \
-        and not dme_spec.ef
+    # (§Perf H-c). gspmd path kept as the measured baseline. EF residuals are
+    # supported on both paths (shard_map keeps each row on its client shard).
+    use_shardmap = mesh is not None and dme_impl in ("auto", "shard_map")
     shardings = collectives.dme_shardings(mesh, client_axes)
     param_pspecs = None
     if use_shardmap:
@@ -82,7 +82,8 @@ def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
         losses, metrics, grads = jax.vmap(per_client)(batch)
         if use_shardmap:
             grad_mean, info, new_ef = collectives.compressed_mean_tree_shardmap(
-                dme_spec, key, grads, mesh, param_pspecs, client_axes
+                dme_spec, key, grads, mesh, param_pspecs, client_axes,
+                ef_chunks=state.get("ef"),
             )
         else:
             grad_mean, info, new_ef = collectives.compressed_mean_tree(

@@ -6,7 +6,7 @@ Validates (against the paper's own claims):
   - Thm 4.3 : Rand-Proj-Spatial(Max) MSE ~= (d/nk - 1)||x||^2 (identical vecs)
   - Thm 4.4 : Rand-Proj-Spatial(T==1) MSE == Rand-k MSE (orthogonal vecs)
   - Lemma 4.1: projection="subsample" reproduces Rand-k-Spatial exactly
-  - Gram decode == paper-literal direct decode (our DESIGN.md §3.3 claim)
+  - Gram decode == paper-literal direct decode (our docs/DESIGN.md §3.3 claim)
   - App. A.1: same rotation for all clients gives no improvement
 """
 import functools
@@ -127,6 +127,68 @@ def test_lemma_4_1_subsample_recovers_rand_k_spatial():
     a = mean_estimate(s_proj, key, xs)
     b = mean_estimate(s_spatial, key, xs)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_lemma_4_1_property_over_seeds(seed):
+    """Property test (ISSUE 2): for ANY seed/key/data draw, Rand-Proj-Spatial
+    with projection='subsample' matches Rand-k-Spatial's decode exactly —
+    shared-randomness and per-chunk modes, gram and direct decode paths."""
+    n, d, k = 5, 64, 4
+    rng = np.random.default_rng(100 + seed)
+    xs = jnp.asarray(rng.standard_normal((n, 2, d)), jnp.float32)
+    key = jax.random.key(1000 + seed)
+    for shared in (True, False):
+        for method in ("direct", "gram"):
+            s_proj = EstimatorSpec(
+                name="rand_proj_spatial", k=k, d_block=d, transform="avg",
+                projection="subsample", decode_method=method,
+                shared_randomness=shared,
+            )
+            s_spatial = EstimatorSpec(
+                name="rand_k_spatial", k=k, d_block=d, transform="avg",
+                shared_randomness=shared,
+            )
+            a = mean_estimate(s_proj, key, xs)
+            b = mean_estimate(s_spatial, key, xs)
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-4,
+                err_msg=f"shared={shared} method={method}",
+            )
+
+
+def test_lemma_4_1_under_error_feedback():
+    """Lemma 4.1 extends through error feedback: the subsample projection's
+    (d/k) G^T z self-decode IS Rand-k's (d/k) scatter, so means AND residual
+    trajectories coincide over multiple EF rounds."""
+    from repro.dist import collectives
+
+    n, d, k = 4, 64, 4
+    rng = np.random.default_rng(9)
+    tree = {"w": jnp.asarray(rng.standard_normal((n, d)), jnp.float32)}
+    s_proj = EstimatorSpec(
+        name="rand_proj_spatial", k=k, d_block=d, transform="avg",
+        projection="subsample", decode_method="direct", ef=True,
+    )
+    s_spatial = EstimatorSpec(name="rand_k_spatial", k=k, d_block=d,
+                              transform="avg", ef=True)
+    ef_a = ef_b = jnp.zeros((n, 1, d))
+    for t in range(4):
+        key = jax.random.fold_in(jax.random.key(11), t)
+        mean_a, _, ef_a = collectives.compressed_mean_tree(
+            s_proj, key, tree, ef_chunks=ef_a
+        )
+        mean_b, _, ef_b = collectives.compressed_mean_tree(
+            s_spatial, key, tree, ef_chunks=ef_b
+        )
+        np.testing.assert_allclose(
+            np.asarray(mean_a["w"]), np.asarray(mean_b["w"]),
+            rtol=2e-3, atol=2e-4, err_msg=f"round {t} mean",
+        )
+        np.testing.assert_allclose(
+            np.asarray(ef_a), np.asarray(ef_b), rtol=2e-3, atol=2e-4,
+            err_msg=f"round {t} residual",
+        )
 
 
 def test_gram_decode_equals_direct_decode():

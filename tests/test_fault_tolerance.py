@@ -117,6 +117,52 @@ def test_straggler_drop_keeps_unbiasedness():
     assert b6 != pytest.approx(b5)
 
 
+def test_fl_straggler_renormalizes_by_actual_participants():
+    """ISSUE 2 bugcheck: when a sampled client drops, the decoded mean must
+    renormalize by the clients that actually reported — NOT the sampled
+    count. Wired through fl.rounds with the identity codec, whose decode is
+    exact: any 1/n_sampled normalisation would show up as a deterministic
+    shrink of the mean."""
+    from repro.fl import Cohort, RoundConfig, get_task, run_rounds
+
+    n, d = 8, 128
+    task = get_task("dme", n_clients=n, d=d, rho=0.6)
+    cohort = Cohort(n_clients=n, participation=1.0, dropout=0.4)
+    spec = EstimatorSpec(name="identity", d_block=d)
+    _, hist = run_rounds(task, spec, cohort, RoundConfig(n_rounds=8))
+    xs = np.asarray(task.aux["xs"])  # (n, d) fixed client vectors
+
+    dropped_any = False
+    for t in range(8):
+        part = cohort.sample_round(0, t)  # same deterministic draw the driver saw
+        assert hist.n_survivors[t] == len(part.survivors)
+        true = xs[part.survivors].mean(0)
+        # correct decode: exact survivors' mean => recorded mse ~ 0
+        assert hist.mse[t] < 1e-9
+        if len(part.survivors) < part.n_sampled:
+            dropped_any = True
+            # the buggy normalisation (sum / n_sampled) is measurably wrong
+            buggy = xs[part.survivors].sum(0) / part.n_sampled
+            assert float(np.sum((buggy - true) ** 2)) > 1e-3
+    assert dropped_any, "dropout=0.4 over 8 rounds never dropped a client"
+
+
+def test_fl_straggler_renormalizes_with_sparsifying_codec():
+    """Same bugcheck through a key-rederiving codec: rand_k with k == d_block
+    is an exact (permutation-complete) encode, so the decode over survivors
+    must reproduce their exact mean — which only happens when both the
+    client_ids and the 1/n_eff normalisation are the survivors'."""
+    from repro.fl import Cohort, RoundConfig, get_task, run_rounds
+
+    n, d = 6, 64
+    task = get_task("dme", n_clients=n, d=d, rho=0.5)
+    cohort = Cohort(n_clients=n, dropout=0.35)
+    spec = EstimatorSpec(name="rand_k", k=d, d_block=d)
+    _, hist = run_rounds(task, spec, cohort, RoundConfig(n_rounds=6))
+    assert any(s < m for s, m in zip(hist.n_survivors, hist.n_sampled))
+    assert max(hist.mse) < 1e-8
+
+
 def test_data_pipeline_determinism_and_noniid():
     data = SyntheticLM(vocab_size=128, seq_len=16, batch=2, n_clients=3, seed=4)
     b1, b2 = data.batch_at(10), data.batch_at(10)
