@@ -5,6 +5,11 @@ temporal-decoding comparison the paper's related work motivates).
 Rows:
     fl/<task>/<estimator>[.temporal]     us_per_round    final=<metric>;
         mean_mse=<...>;bytes=<total>;bytes_to_target=<...|never>
+
+``heterogeneous`` runs a mixed-budget cohort on BOTH the local and gspmd
+backends and asserts the per-client byte ledgers sum to the same totals —
+the payload's self-described budget metadata is what makes the gspmd decode
+possible at all (codec Pipeline API).
 """
 from __future__ import annotations
 
@@ -12,7 +17,7 @@ import time
 
 import numpy as np
 
-from repro.core import EstimatorSpec
+from repro.core import codec
 from repro.fl import Cohort, RoundConfig, get_task, run_rounds
 
 from .common import rows
@@ -41,10 +46,10 @@ def run_setup(out, name, task_kw, d_block, k, n_rounds, target, cohort=None):
     task = get_task(name, **task_kw)
     cohort = cohort or Cohort(n_clients=task.n_clients)
     for est, kw, temporal in ESTIMATORS:
-        spec = EstimatorSpec(name=est, k=k, d_block=d_block, **kw)
+        pipe = codec.build(est, k=k, d_block=d_block, **kw)
         cfg = RoundConfig(n_rounds=n_rounds, temporal=temporal)
         t0 = time.time()
-        state, hist = run_rounds(task, spec, cohort, cfg)
+        state, hist = run_rounds(task, pipe, cohort, cfg)
         us_round = (time.time() - t0) / n_rounds * 1e6
         final = "nan" if task.metric is None else f"{hist.metric[-1]:.5f}"
         btt = "n/a"
@@ -57,13 +62,69 @@ def run_setup(out, name, task_kw, d_block, k, n_rounds, target, cohort=None):
              f"bytes={hist.total_bytes};bytes_to_target={btt}")
 
 
+def client_temporal(out, n_rounds=20):
+    """True per-client Rand-k-Temporal vs the broadcast variant on a drift
+    task with persistent per-client offsets (the workload that separates
+    them; codec.Temporal / ClientState memories)."""
+    task = get_task("drift", n_clients=8, d=256, rho=0.95, omega=0.03,
+                    client_bias=1.0)
+    cohort = Cohort(n_clients=8)
+    variants = [
+        ("broadcast", codec.build("rand_k", k=26, d_block=256), True),
+        ("per_client",
+         codec.Pipeline([codec.RandK(k=26, d_block=256), codec.Temporal()]),
+         False),
+    ]
+    for tag, pipe, broadcast in variants:
+        t0 = time.time()
+        _, hist = run_rounds(task, pipe, cohort,
+                             RoundConfig(n_rounds=n_rounds, temporal=broadcast))
+        us_round = (time.time() - t0) / n_rounds * 1e6
+        rows(out, f"fl/drift_bias/rand_k_temporal.{tag}", us_round,
+             f"mean_mse={np.nanmean(hist.mse[n_rounds // 2:]):.6f};"
+             f"bytes={hist.total_bytes}")
+
+
+def heterogeneous(out, n_rounds=6, d=256):
+    """Mixed-budget cohort on local AND gspmd backends; ledgers must agree.
+
+    The gspmd path decodes each budget group through dist.collectives — the
+    group's k rides in ``payload.meta.budget``, so no backend special-casing
+    — and the summed per-client byte ledger must equal the local backend's.
+    """
+    n = 8
+    budgets = (13, 13, 26, 26, 26, 52, 52, 52)
+    task = get_task("dme", n_clients=n, d=d, rho=0.9)
+    cohort = Cohort(n_clients=n, budgets=budgets)
+    for est, kw in [("rand_k", dict()), ("rand_proj_spatial", dict(transform="avg"))]:
+        pipe = codec.build(est, k=26, d_block=d, **kw)
+        totals = {}
+        for backend in ("local", "gspmd"):
+            t0 = time.time()
+            _, hist = run_rounds(task, pipe, cohort,
+                                 RoundConfig(n_rounds=n_rounds, backend=backend))
+            us_round = (time.time() - t0) / n_rounds * 1e6
+            totals[backend] = hist.total_bytes
+            rows(out, f"fl/het_budget/{est}/{backend}", us_round,
+                 f"mean_mse={np.nanmean(hist.mse):.6f};bytes={hist.total_bytes}")
+        if totals["local"] != totals["gspmd"]:
+            raise AssertionError(
+                f"heterogeneous-budget ledger mismatch for {est}: "
+                f"local={totals['local']} gspmd={totals['gspmd']}"
+            )
+
+
 def run(out):
     for name, (task_kw, d_block, k, n_rounds, target) in SETUPS.items():
         run_setup(out, name, task_kw, d_block, k, n_rounds, target)
+    client_temporal(out)
+    heterogeneous(out)
 
 
 def smoke(out):
-    """Reduced-size CI row set: correlated DME + a drifting task."""
+    """Reduced-size CI row set: correlated DME + a drifting task + the
+    heterogeneous-budget local/gspmd ledger parity check."""
     run_setup(out, "dme", dict(n_clients=8, d=128, rho=0.9), 128, 16, 8, None)
     run_setup(out, "drift", dict(n_clients=8, d=128, rho=0.95, omega=0.03),
               128, 16, 8, None)
+    heterogeneous(out, n_rounds=3, d=128)

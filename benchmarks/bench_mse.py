@@ -5,7 +5,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import EstimatorSpec, correlation
+from repro.core import codec, correlation
 
 from .common import base_vector_clients, mse_over_trials, rows
 
@@ -21,7 +21,7 @@ def fig2_identical(out, trials=300):
         res = {}
         for name, tf in [("rand_k", "one"), ("rand_k_spatial", "max"),
                          ("rand_proj_spatial", "max")]:
-            spec = EstimatorSpec(name=name, k=k, d_block=d, transform=tf)
+            spec = codec.build(name, k=k, d_block=d, transform=tf)
             mse, sec = mse_over_trials(spec, xs, trials)
             res[name] = mse
             rows(out, f"fig2/identical/n{n}_k{k}/{name}", sec * 1e6, f"{mse:.4f}")
@@ -37,7 +37,7 @@ def thm44_orthogonal(out, trials=400):
     xs = jnp.asarray((q.T / np.linalg.norm(q.T, axis=1, keepdims=True))[:, None, :],
                      jnp.float32)
     for name, tf in [("rand_k", "one"), ("rand_proj_spatial", "one")]:
-        spec = EstimatorSpec(name=name, k=k, d_block=d, transform=tf)
+        spec = codec.build(name, k=k, d_block=d, transform=tf)
         mse, sec = mse_over_trials(spec, xs, trials)
         rows(out, f"thm4.4/orthogonal/n{n}_k{k}/{name}", sec * 1e6, f"{mse:.4f}")
     # Eq. 1 with unit-norm clients: (1/n^2)(d/k - 1) * n
@@ -63,7 +63,7 @@ def fig3_correlation(out, trials=300):
         r = float(correlation.r_exact(xs))
         rows(out, f"fig3/{label}/n{n}_k{k}/rand_k_theory_eq1", 0, f"{eq1:.4f}")
         for name, tf in [("rand_k_spatial", "opt"), ("rand_proj_spatial", "opt")]:
-            spec = EstimatorSpec(name=name, k=k, d_block=d, transform=tf, r_value=r)
+            spec = codec.build(name, k=k, d_block=d, transform=tf, r_value=r)
             mse, sec = mse_over_trials(spec, xs, trials)
             rows(out, f"fig3/{label}/n{n}_k{k}/{name}", sec * 1e6,
                  f"{mse:.4f};vs_eq1={mse/eq1:.3f}")
@@ -80,7 +80,7 @@ def practical_avg_and_est(out, trials=200):
         ("rand_proj_spatial", dict(transform="opt", r_mode="est"), "rand_proj_spatial_est"),
         ("rand_proj_spatial", dict(transform="opt", r_value=r), "rand_proj_spatial_oracle"),
     ]:
-        spec = EstimatorSpec(name=name, k=k, d_block=d, **kw)
+        spec = codec.build(name, k=k, d_block=d, **kw)
         mse, sec = mse_over_trials(spec, xs, trials)
         rows(out, f"practical/R{r:.1f}/n{n}_k{k}/{label}", sec * 1e6, f"{mse:.4f}")
 

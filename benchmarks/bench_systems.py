@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EstimatorSpec
+from repro.core import codec
 from repro.core import beta as beta_lib
 from repro.core.estimators import base as est_base
 from repro.kernels import ops as kops
@@ -24,7 +24,7 @@ def walltime(out, n=10, k=102, d=1024):
         ("rand_proj_spatial", {"transform": "avg"}),
         ("top_k", {}), ("wangni", {}), ("induced", {}),
     ]:
-        spec = EstimatorSpec(name=name, k=k, d_block=d, **kw)
+        spec = codec.build(name, k=k, d_block=d, **kw)
         enc = jax.jit(lambda key, x: est_base.encode(spec, key, 0, x))
         sec_e, payload0 = timed(enc, key, xs[0])
         payloads = jax.jit(lambda key, xs: est_base.encode_all(spec, key, xs))(key, xs)
@@ -69,7 +69,7 @@ def chunked_scale(out):
     ).reshape(n, c, d)
     key = jax.random.key(3)
     for shared, label in [(True, "shared_gram"), (False, "per_chunk_paper")]:
-        spec = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=d,
+        spec = codec.build("rand_proj_spatial", k=k, d_block=d,
                              transform="avg", shared_randomness=shared)
         if not shared:
             xs_small = xs[:, :32]  # paper-faithful path is O(C) eighs; sample

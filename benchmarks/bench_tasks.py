@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EstimatorSpec, correlation, mean_estimate
+from repro.core import codec, mean_estimate
 
 from .common import rows, timed
 
@@ -49,7 +49,7 @@ def power_iteration(out, n=10, k=102, d=1024, iters=15, non_iid=False):
     tag = "noniid" if non_iid else "iid"
 
     for name, kw in ESTIMATORS + [("identity", {})]:
-        spec = EstimatorSpec(name=name, k=k, d_block=d, **kw)
+        spec = codec.build(name, k=k, d_block=d, **kw)
 
         @jax.jit
         def one_round(v, key):
@@ -77,7 +77,7 @@ def kmeans(out, n=10, k=102, d=1024, iters=10, n_clusters=10, non_iid=False):
     init = jnp.asarray(x[:: x.shape[0] // n_clusters][:n_clusters])
 
     for name, kw in ESTIMATORS + [("identity", {})]:
-        spec = EstimatorSpec(name=name, k=k, d_block=d, **kw)
+        spec = codec.build(name, k=k, d_block=d, **kw)
 
         @jax.jit
         def one_round(cents, key):
@@ -113,7 +113,7 @@ def linreg(out, n=10, k=51, d=512, iters=30, lr=0.05, non_iid=False):
     tag = "noniid" if non_iid else "iid"
 
     for name, kw in ESTIMATORS + [("identity", {})]:
-        spec = EstimatorSpec(name=name, k=k, d_block=d, **kw)
+        spec = codec.build(name, k=k, d_block=d, **kw)
 
         @jax.jit
         def one_round(w, key):

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EstimatorSpec, correlation, mean_estimate
+from repro.core import correlation, mean_estimate
 
 
 def timed(fn, *args, warmup=1, iters=3):
@@ -19,7 +19,8 @@ def timed(fn, *args, warmup=1, iters=3):
     return (time.time() - t0) / iters, out
 
 
-def mse_over_trials(spec: EstimatorSpec, xs, trials: int, seed: int = 0):
+def mse_over_trials(spec, xs, trials: int, seed: int = 0):
+    # ``spec``: a codec Pipeline or sparsifier config (mean_estimate normalises)
     """Mean squared error E||x_hat - x_bar||^2 over `trials` rounds, timed."""
     xbar = jnp.mean(xs, axis=0)
 

@@ -27,7 +27,7 @@ def smoke(out: list[str]) -> None:
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core import EstimatorSpec
+    from repro.core import codec
     from repro.dist import collectives
 
     from . import bench_systems
@@ -37,7 +37,7 @@ def smoke(out: list[str]) -> None:
     xs, r = base_vector_clients(n, d, 3, seed=0)
     for name, tf in [("rand_k", "one"), ("rand_k_spatial", "avg"),
                      ("rand_proj_spatial", "avg")]:
-        spec = EstimatorSpec(name=name, k=k, d_block=d, transform=tf)
+        spec = codec.build(name, k=k, d_block=d, transform=tf)
         mse, sec = mse_over_trials(spec, xs, trials=20)
         rows(out, f"smoke/mse_R{r:.1f}/n{n}_k{k}/{name}", sec * 1e6, f"{mse:.4f}")
 
@@ -54,7 +54,7 @@ def smoke(out: list[str]) -> None:
         "b": jnp.asarray(rng.standard_normal((n, 96)), jnp.float32),
     }
     for payload_dtype in ("float32", "int8"):
-        spec = EstimatorSpec(name="rand_proj_spatial", k=32, d_block=256,
+        spec = codec.build("rand_proj_spatial", k=32, d_block=256,
                              transform="avg", payload_dtype=payload_dtype)
         _, info, _ = collectives.compressed_mean_tree(spec, jax.random.key(0), tree)
         fn = jax.jit(

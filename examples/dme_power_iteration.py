@@ -14,7 +14,7 @@ transmit data-dependent indices, and identity is the uncompressed baseline.
 """
 import argparse
 
-from repro.core import EstimatorSpec
+from repro.core import codec
 from repro.fl import Cohort, RoundConfig, get_task, run_rounds
 
 ap = argparse.ArgumentParser()
@@ -33,7 +33,7 @@ for name, kw in [
     ("identity", {}), ("rand_k", {}), ("rand_k_spatial", dict(transform="avg")),
     ("rand_proj_spatial", dict(transform="avg")), ("wangni", {}), ("induced", {}),
 ]:
-    spec = EstimatorSpec(name=name, k=k, d_block=d, **kw)
+    spec = codec.build(name, k=k, d_block=d, **kw)
     state, hist = run_rounds(task, spec, cohort, RoundConfig(n_rounds=args.iters))
     err = task.metric(state)
     print(f"  {name:20s} ||v - v_top|| = {err:.4f}   "

@@ -22,7 +22,7 @@ import argparse
 
 import numpy as np
 
-from repro.core import EstimatorSpec
+from repro.core import codec
 from repro.fl import Cohort, RoundConfig, get_task, run_rounds
 
 ap = argparse.ArgumentParser()
@@ -50,7 +50,7 @@ for label, name, kw, temporal in [
     ("rand_proj_spatial(wavg)+temporal", "rand_proj_spatial",
      dict(transform="wavg"), True),
 ]:
-    spec = EstimatorSpec(name=name, k=k, d_block=d_block, **kw)
+    spec = codec.build(name, k=k, d_block=d_block, **kw)
     cfg = RoundConfig(n_rounds=rounds, temporal=temporal)
     state, hist = run_rounds(task, spec, cohort, cfg)
     acc = task.aux["accuracy"](state)

@@ -5,6 +5,12 @@
 Eight clients hold correlated 1024-dim vectors; each may send only k=64
 numbers. Rand-Proj-Spatial (this paper) beats Rand-k and Rand-k-Spatial by
 using SRHT projections + correlation-aware spectral decoding.
+
+NOTE: this example deliberately stays on the deprecated flat ``EstimatorSpec``
+— it is the living proof that pre-migration call sites run unmodified through
+the codec-pipeline shim (emitting exactly one DeprecationWarning). New code
+should compose ``repro.core.codec`` pipelines; see examples/fl_logistic.py
+and the README quickstart.
 """
 import jax
 import jax.numpy as jnp

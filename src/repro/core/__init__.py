@@ -1,9 +1,14 @@
 """The paper's contribution: correlation-aware sparsified mean estimation.
 
 Public surface:
-    EstimatorSpec, mean_estimate, encode, decode  — the DME codec family
-    chunking                                      — framework-scale blockwise application
-    correlation.r_exact                           — paper Eq. 7
+    codec                — the composable codec pipeline API (Payload, Stage
+                           configs, Pipeline, ClientState) — THE estimator API
+    mean_estimate, encode, decode — functional conveniences (accept a
+                           Pipeline, a sparsifier config, or the deprecated
+                           EstimatorSpec)
+    chunking             — framework-scale blockwise application
+    correlation.r_exact  — paper Eq. 7
+    EstimatorSpec        — DEPRECATED flat spec; converts via codec.as_pipeline
 """
 from . import beta, chunking, correlation, transforms  # noqa: F401
 from .estimators import (  # noqa: F401
@@ -14,3 +19,4 @@ from .estimators import (  # noqa: F401
     mean_estimate,
     names,
 )
+from . import codec  # noqa: F401  (after .estimators: codec reads the registry)

@@ -1,0 +1,46 @@
+"""repro.core.codec — the composable codec pipeline (estimator API v2).
+
+The paper's estimators are one point in a compression design space:
+sparsification (Rand-k / SRHT projection), correlation-aware decoding
+(spatial and temporal), and quantization. This package models that space as
+orthogonal *stages* composed into a *pipeline*:
+
+    from repro.core import codec
+    pipe = codec.Pipeline([
+        codec.RandProjSpatial(k=64, d_block=1024, transform="avg"),
+        codec.Int8Quant(),
+        codec.ErrorFeedback(),
+    ])
+    payload, _ = pipe.encode(key, client_id, x_chunks)
+    x_hat = pipe.decode(key, stacked_payloads, n)
+
+Payloads are self-describing (budget + exact declared byte ledger riding in
+``payload.meta``); client-held cross-round state (EF residuals, temporal
+memories) lives in an explicit ``ClientState`` pytree. The deprecated flat
+``EstimatorSpec`` converts via ``as_pipeline`` / ``build`` (see compat).
+"""
+from .compat import as_pipeline, build, spec_to_pipeline  # noqa: F401
+from .payload import (  # noqa: F401
+    AUX,
+    INDICES,
+    SCALES,
+    VALUES,
+    ArraySpec,
+    Payload,
+    PayloadMeta,
+    check_against_schema,
+)
+from .pipeline import Pipeline  # noqa: F401
+from .quantizers import QUANTIZERS, Bf16Quant, Int8Quant  # noqa: F401
+from .sparsifiers import (  # noqa: F401
+    SPARSIFIERS,
+    Identity,
+    Induced,
+    RandK,
+    RandKSpatial,
+    RandProjSpatial,
+    Sparsifier,
+    TopK,
+    Wangni,
+)
+from .stages import ClientState, ErrorFeedback, Temporal  # noqa: F401

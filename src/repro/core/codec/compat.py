@@ -1,0 +1,97 @@
+"""Back-compat: the old flat ``EstimatorSpec`` -> codec ``Pipeline``.
+
+``build(name, **old_style_kwargs)`` is the one conversion point: it maps the
+deprecated cross-cutting spec fields onto the typed per-estimator configs
+(``wangni_capacity`` -> ``Wangni.capacity``, ``induced_topk_frac`` ->
+``Induced.topk_frac``, ``payload_dtype`` -> a quantizer stage, ``ef`` -> an
+``ErrorFeedback`` stage) and silently drops old spec fields that do not
+apply to the chosen sparsifier (the old dataclass carried every field for
+every estimator; e.g. ``transform`` on rand_k was always ignored). Unknown
+keyword names still raise, so typos do not vanish.
+
+``as_pipeline`` is the boundary normaliser every migrated subsystem calls:
+Pipeline -> itself, bare Sparsifier config -> one-stage Pipeline,
+EstimatorSpec -> converted Pipeline. Constructing an ``EstimatorSpec`` warns
+(once per process, DeprecationWarning); converting one here does not warn
+again — the construction already did.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..estimators import base as est_base
+from .pipeline import Pipeline
+from .quantizers import QUANTIZERS
+from .sparsifiers import SPARSIFIERS, Sparsifier
+from .stages import ErrorFeedback, Temporal
+
+# old EstimatorSpec field -> per-estimator config field
+_FIELD_RENAMES = {"wangni_capacity": "capacity", "induced_topk_frac": "topk_frac"}
+
+
+def _estspec_fields() -> set:
+    return {f.name for f in dataclasses.fields(est_base.EstimatorSpec)}
+
+
+def build(name: str, **kw) -> Pipeline:
+    """Old-style construction of a new-style pipeline.
+
+        build("rand_proj_spatial", k=64, d_block=1024, transform="avg",
+              payload_dtype="int8", ef=True)
+        == Pipeline([RandProjSpatial(k=64, d_block=1024, transform="avg"),
+                     Int8Quant(), ErrorFeedback()])
+    """
+    if name not in SPARSIFIERS:
+        raise KeyError(f"unknown estimator {name!r}; have {sorted(SPARSIFIERS)}")
+    payload_dtype = kw.pop("payload_dtype", "float32")
+    ef = kw.pop("ef", False)
+    temporal = kw.pop("temporal", False)
+    cls = SPARSIFIERS[name]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    cfg_kw = {}
+    for key, value in kw.items():
+        new_key = _FIELD_RENAMES.get(key, key)
+        if new_key in fields:
+            cfg_kw[new_key] = value
+        elif key not in _estspec_fields():
+            raise TypeError(
+                f"{name!r} takes no field {key!r} (valid: {sorted(fields)})"
+            )
+        # else: a legacy spec field that does not apply to this sparsifier —
+        # dropped, matching the old flat dataclass's behaviour.
+    stages: list = [cls(**cfg_kw)]
+    if payload_dtype != "float32":
+        if payload_dtype not in QUANTIZERS:
+            raise ValueError(
+                f"unknown payload_dtype {payload_dtype!r}; "
+                f"have float32, {', '.join(sorted(QUANTIZERS))}"
+            )
+        stages.append(QUANTIZERS[payload_dtype]())
+    if ef:
+        stages.append(ErrorFeedback())
+    if temporal:
+        stages.append(Temporal())
+    return Pipeline(tuple(stages))
+
+
+def spec_to_pipeline(spec: "est_base.EstimatorSpec") -> Pipeline:
+    kw = {
+        f.name: getattr(spec, f.name)
+        for f in dataclasses.fields(spec)
+        if f.name != "name"
+    }
+    return build(spec.name, **kw)
+
+
+def as_pipeline(obj) -> Pipeline:
+    """Normalise any codec-like object to a Pipeline."""
+    if isinstance(obj, Pipeline):
+        return obj
+    if isinstance(obj, Sparsifier):
+        return Pipeline((obj,))
+    if isinstance(obj, est_base.EstimatorSpec):
+        return spec_to_pipeline(obj)
+    raise TypeError(
+        f"expected Pipeline, sparsifier config or EstimatorSpec, got "
+        f"{type(obj).__name__}"
+    )

@@ -1,0 +1,164 @@
+"""Self-describing payload container for the codec pipeline.
+
+A ``Payload`` is what one client transmits for one round: a dict of arrays
+(the only thing that crosses the wire) plus static ``PayloadMeta`` — the
+per-client budget, the chunk geometry, the stage stack that produced it, and
+a *declared* byte schema. The schema is computed from the pipeline config
+alone (never from the arrays), so the ledger is an independent claim about
+the wire format that tests can check against the actual array bytes
+(``tests/test_codec_pipeline.py`` asserts ``declared == actual`` for every
+registered sparsifier x quantizer combination — catching drift like an int8
+scale array being added to the payload but not to the ledger).
+
+``Payload`` is registered as a pytree whose children are the arrays (sorted
+by name, deterministic) and whose aux data is the hashable meta, so payloads
+vmap/stack/all_gather/index exactly like the anonymous dict payloads they
+replace: ``jax.vmap`` over ``Pipeline.encode`` yields a stacked Payload with
+a leading client axis and unchanged meta, and ``jax.tree.map`` rebuilds the
+Payload around transformed leaves.
+
+Budget metadata riding in the payload is what lets a server decode a
+heterogeneous-k cohort without backend special-casing: the decode path reads
+``payload.meta.budget`` instead of trusting its own config (``Pipeline``
+re-derives the sparsifier at that budget when they disagree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ArraySpec kinds
+VALUES = "values"    # quantizable payload values (vals / top_vals / rand_vals)
+INDICES = "indices"  # data-dependent coordinates (top_k / wangni / induced)
+SCALES = "scales"    # quantization scales (added by Int8Quant)
+AUX = "aux"          # side statistics (e.g. norm_sq for the online R-hat)
+
+# The historical value-array names, for legacy bare-dict payloads that carry
+# no schema (Payload.meta is the source of truth whenever present).
+LEGACY_VALUE_NAMES = ("vals", "top_vals", "rand_vals")
+
+
+class ArraySpec(NamedTuple):
+    """One payload array's declared wire format."""
+
+    name: str
+    shape: tuple
+    dtype: str
+    kind: str
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) * _itemsize(self.dtype)
+
+
+def _itemsize(dtype: str) -> int:
+    return np.dtype(getattr(jnp, dtype)).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadMeta:
+    """Static, hashable payload description (jit/vmap aux data)."""
+
+    budget: int                      # per-client k this payload was encoded at
+    d_block: int                     # chunk size the budget applies to
+    stages: tuple = ()               # stage names, encode order
+    schema: tuple = ()               # tuple[ArraySpec, ...]: declared wire format
+
+    @property
+    def declared_nbytes(self) -> int:
+        """Per-client wire bytes this payload CLAIMS to occupy (the ledger)."""
+        return sum(s.nbytes for s in self.schema)
+
+    def array_spec(self, name: str) -> ArraySpec:
+        for s in self.schema:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    @property
+    def value_names(self) -> tuple:
+        return tuple(s.name for s in self.schema if s.kind == VALUES)
+
+
+@dataclasses.dataclass
+class Payload:
+    """arrays: name -> array (per-client, or stacked with a leading client
+    axis once vmapped); meta: static self-description."""
+
+    arrays: dict
+    meta: PayloadMeta
+
+    @property
+    def nbytes(self) -> int:
+        """ACTUAL summed array bytes (all axes — leading client axis included
+        when stacked). For an unstacked payload this must equal
+        ``meta.declared_nbytes``; the ledger-honesty tests enforce it."""
+        return sum(
+            int(np.prod(a.shape, dtype=np.int64)) * np.dtype(a.dtype).itemsize
+            for a in self.arrays.values()
+        )
+
+    def per_client_nbytes(self) -> int:
+        """Actual bytes with the leading (client) axis stripped — the wire
+        cost of ONE client's transmission inside a stacked payload."""
+        return sum(
+            int(np.prod(a.shape[1:], dtype=np.int64)) * np.dtype(a.dtype).itemsize
+            for a in self.arrays.values()
+        )
+
+    def __getitem__(self, name: str):
+        return self.arrays[name]
+
+
+def _payload_flatten(p: Payload):
+    names = tuple(sorted(p.arrays))
+    return tuple(p.arrays[n] for n in names), (names, p.meta)
+
+
+def _payload_unflatten(aux, children):
+    names, meta = aux
+    return Payload(arrays=dict(zip(names, children)), meta=meta)
+
+
+jax.tree_util.register_pytree_node(Payload, _payload_flatten, _payload_unflatten)
+
+
+def arrays_of(payload) -> dict:
+    """Accept a Payload or a bare dict (legacy) and return the array dict."""
+    if isinstance(payload, Payload):
+        return payload.arrays
+    if isinstance(payload, dict):
+        return payload
+    raise TypeError(f"expected Payload or dict, got {type(payload).__name__}")
+
+
+def meta_of(payload) -> PayloadMeta | None:
+    return payload.meta if isinstance(payload, Payload) else None
+
+
+def check_against_schema(payload: Payload) -> list[str]:
+    """Diff the actual arrays against the declared schema. Returns a list of
+    human-readable mismatches (empty == the ledger is honest)."""
+    problems = []
+    schema = {s.name: s for s in payload.meta.schema}
+    for name, arr in payload.arrays.items():
+        if name not in schema:
+            problems.append(f"array {name!r} not declared in schema")
+            continue
+        s = schema[name]
+        if tuple(arr.shape) != tuple(s.shape):
+            problems.append(f"{name}: shape {tuple(arr.shape)} != declared {s.shape}")
+        if np.dtype(arr.dtype) != np.dtype(getattr(jnp, s.dtype)):
+            problems.append(f"{name}: dtype {arr.dtype} != declared {s.dtype}")
+    for name in schema:
+        if name not in payload.arrays:
+            problems.append(f"declared array {name!r} missing from payload")
+    if payload.nbytes != payload.meta.declared_nbytes:
+        problems.append(
+            f"nbytes {payload.nbytes} != declared {payload.meta.declared_nbytes}"
+        )
+    return problems

@@ -1,0 +1,274 @@
+"""The composable codec pipeline: ordered stages -> one estimator.
+
+    Pipeline([RandProjSpatial(k=64, d_block=1024), Int8Quant(), ErrorFeedback()])
+
+A pipeline owns exactly one sparsifier, at most one quantizer, and the
+optional stateful stages (error feedback, temporal side information). The
+dataflow is fixed by role, not list position:
+
+    encode:  x  --temporal subtract--> --EF add residual--> sparsify
+                --quantize--> Payload            (client side)
+    decode:  Payload --dequantize--> sparsifier decode --side add-back--> x̂
+                                                  (server side)
+
+``encode`` threads client-held state (``ClientState``) explicitly and
+returns the updated state next to the payload; stateless pipelines return
+``state=None`` and cost nothing. The payload is self-describing
+(``payload.meta``: budget, stage stack, declared byte schema), and
+``decode`` trusts the PAYLOAD's budget over its own config — that is what
+lets one decode path serve heterogeneous-k cohorts on any backend.
+
+All stages are frozen dataclasses, so a ``Pipeline`` is hashable and can be
+closed over by jit / passed as a static argument, exactly like the
+deprecated ``EstimatorSpec`` it replaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..estimators import base as est_base
+from .payload import LEGACY_VALUE_NAMES, Payload, PayloadMeta, arrays_of, meta_of
+from .sparsifiers import Sparsifier
+from .stages import ClientState
+
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    stages: tuple
+
+    def __post_init__(self):
+        object.__setattr__(self, "stages", tuple(self.stages))
+        by_role: dict = {}
+        for s in self.stages:
+            role = getattr(s, "role", None)
+            if role not in ("sparsify", "quantize", "feedback", "temporal"):
+                raise TypeError(f"{s!r} is not a codec stage (role={role!r})")
+            by_role.setdefault(role, []).append(s)
+            if len(by_role[role]) > 1:
+                raise ValueError(f"pipeline has more than one {role!r} stage")
+        if "sparsify" not in by_role:
+            raise ValueError("pipeline needs exactly one sparsifier stage")
+
+    # ------------------------------------------------------------ structure
+
+    @property
+    def sparsifier(self) -> Sparsifier:
+        return next(s for s in self.stages if s.role == "sparsify")
+
+    @property
+    def quantizer(self):
+        return next((s for s in self.stages if s.role == "quantize"), None)
+
+    @property
+    def ef_stage(self):
+        return next((s for s in self.stages if s.role == "feedback"), None)
+
+    @property
+    def temporal_stage(self):
+        return next((s for s in self.stages if s.role == "temporal"), None)
+
+    @property
+    def has_ef(self) -> bool:
+        return self.ef_stage is not None
+
+    @property
+    def has_client_temporal(self) -> bool:
+        t = self.temporal_stage
+        return t is not None and t.per_client
+
+    @property
+    def stateful(self) -> bool:
+        return self.has_ef or self.has_client_temporal
+
+    # convenience forwards (the attributes drivers/benchmarks report on)
+    @property
+    def name(self) -> str:
+        return self.sparsifier.name
+
+    @property
+    def k(self) -> int:
+        return self.sparsifier.budget
+
+    @property
+    def d_block(self) -> int:
+        return self.sparsifier.d_block
+
+    @property
+    def transform(self):
+        return getattr(self.sparsifier, "transform", None)
+
+    def describe(self) -> str:
+        return " | ".join(s.name for s in self.stages)
+
+    # ------------------------------------------------------------- rebuilds
+
+    def replace_sparsifier(self, _ignore_missing: bool = False, **kw) -> "Pipeline":
+        sp = self.sparsifier
+        fields = {f.name for f in dataclasses.fields(sp)}
+        if _ignore_missing:
+            kw = {k: v for k, v in kw.items() if k in fields}
+        else:
+            unknown = set(kw) - fields
+            if unknown:
+                raise TypeError(
+                    f"sparsifier {sp.name!r} has no field(s) {sorted(unknown)}"
+                )
+        if not kw:
+            return self
+        new_sp = dataclasses.replace(sp, **kw)
+        return Pipeline(tuple(new_sp if s is sp else s for s in self.stages))
+
+    # the drop-in for the old ``spec.replace(...)``
+    replace = replace_sparsifier
+
+    def with_budget(self, k: int) -> "Pipeline":
+        """Re-target the sparsifier at budget ``k`` (no-op for budget-free
+        sparsifiers like identity, and when k already matches)."""
+        if not hasattr(self.sparsifier, "k") or self.sparsifier.k == k:
+            return self
+        return self.replace_sparsifier(k=k)
+
+    # --------------------------------------------------------------- ledger
+
+    def payload_schema(self, n_chunks: int) -> tuple:
+        schema = self.sparsifier.payload_schema(n_chunks)
+        if self.quantizer is not None:
+            schema = self.quantizer.transform_schema(schema)
+        return schema
+
+    def payload_meta(self, n_chunks: int) -> PayloadMeta:
+        return PayloadMeta(
+            budget=self.sparsifier.budget,
+            d_block=self.d_block,
+            stages=tuple(s.name for s in self.stages),
+            schema=self.payload_schema(n_chunks),
+        )
+
+    def payload_nbytes(self, n_chunks: int) -> int:
+        """Declared per-client wire bytes for an ``n_chunks``-chunk vector."""
+        return self.payload_meta(n_chunks).declared_nbytes
+
+    # ------------------------------------------------------- stateless core
+
+    def encode_payload(self, key, client_id, x_cd) -> Payload:
+        """sparsify + quantize one client's (C, d_block) chunks."""
+        arrays = self.sparsifier.encode(key, client_id, x_cd)
+        meta = self.payload_meta(x_cd.shape[0])
+        if self.quantizer is not None:
+            qkey = est_base.client_key(key, client_id)
+            arrays = self.quantizer.encode(qkey, arrays, meta.value_names)
+        return Payload(arrays=arrays, meta=meta)
+
+    def _for_payload(self, payload) -> "Pipeline":
+        """Trust the payload's self-described budget over our own config."""
+        meta = meta_of(payload)
+        if meta is None:
+            return self
+        return self.with_budget(meta.budget)
+
+    def _dequantize(self, payload) -> dict:
+        arrays = arrays_of(payload)
+        if self.quantizer is None:
+            return arrays
+        meta = meta_of(payload)
+        if meta is not None:
+            names = meta.value_names
+        else:  # legacy bare dict: only the historical value arrays quantize
+            names = tuple(n for n in arrays if n in LEGACY_VALUE_NAMES)
+        return self.quantizer.decode(arrays, names)
+
+    def decode_payload(self, key, payloads, n: int, client_ids=None):
+        """Stacked payloads (leading n) -> (C, d_block) mean estimate."""
+        pipe = self._for_payload(payloads)
+        arrays = pipe._dequantize(payloads)
+        return pipe.sparsifier.decode(key, arrays, n, client_ids=client_ids)
+
+    def self_decode(self, key, client_id, payload):
+        """One client's unbiased view of what the server attributes to it."""
+        pipe = self._for_payload(payload)
+        arrays = pipe._dequantize(payload)
+        return pipe.sparsifier.self_decode(key, client_id, arrays)
+
+    # ------------------------------------------------- stateful client side
+
+    def init_client_state(self, n_clients: int, n_chunks: int):
+        """Stacked (leading n_clients) ClientState, or None if stateless."""
+        if not self.stateful:
+            return None
+
+        def rows(stage):
+            if stage is None:
+                return None
+            row = stage.client_state(n_chunks, self.d_block)
+            if row is None:
+                return None
+            return jnp.zeros((n_clients,) + row.shape, row.dtype)
+
+        return ClientState(ef=rows(self.ef_stage), memory=rows(self.temporal_stage))
+
+    def encode(self, key, client_id, x_cd, *, state: ClientState | None = None,
+               side_info=None):
+        """One client's full encode: temporal subtract -> EF add -> sparsify
+        -> quantize, plus the state updates. Returns (Payload, new_state);
+        new_state is None when no state was threaded in."""
+        tstage = self.temporal_stage
+        mem = state.memory if state is not None else None
+        side = side_info
+        if tstage is not None and tstage.per_client and mem is not None:
+            side = mem  # the client's own memory IS its side information
+        x_enc = x_cd if side is None else x_cd - side
+        resid = state.ef if state is not None else None
+        if self.has_ef and resid is not None:
+            x_enc = x_enc + resid
+        payload = self.encode_payload(key, client_id, x_enc)
+        if state is None:
+            return payload, None
+        new_ef, new_mem = state.ef, state.memory
+        update_mem = tstage is not None and tstage.per_client and mem is not None
+        if (self.has_ef and resid is not None) or update_mem:
+            recon = self.self_decode(key, client_id, payload)
+            if self.has_ef and resid is not None:
+                new_ef = x_enc - recon
+            if update_mem:
+                eta = tstage.resolve_eta(self.sparsifier.budget, self.d_block)
+                new_mem = mem + eta * recon
+        return payload, ClientState(ef=new_ef, memory=new_mem)
+
+    def decode(self, key, payloads, n: int, *, client_ids=None, side_info=None):
+        """Server decode of stacked payloads; ``side_info`` is whatever must
+        be added back (the broadcast estimate, or the mean of the survivors'
+        mirrored memories for per-client temporal pipelines)."""
+        out = self.decode_payload(key, payloads, n, client_ids=client_ids)
+        return out if side_info is None else out + side_info
+
+    # ------------------------------------------------------------ batched
+
+    def encode_all(self, key, xs, *, client_ids=None, side_info=None, states=None):
+        """xs: (n, C, d) -> (stacked payloads, stacked new states | None).
+
+        ``client_ids`` (n,) overrides the 0..n-1 assignment (participants of
+        a larger cohort); ``states`` is a stacked ClientState for those same
+        clients."""
+        n = xs.shape[0]
+        ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
+        if states is None:
+            payloads = jax.vmap(
+                lambda i, x: self.encode(key, i, x, side_info=side_info)[0]
+            )(ids, xs)
+            return payloads, None
+        return jax.vmap(
+            lambda i, x, st: self.encode(key, i, x, state=st, side_info=side_info)
+        )(ids, xs, states)
+
+    def mean_estimate(self, key, xs, *, client_ids=None, side_info=None):
+        """One-shot DME: xs (n, C, d) -> (C, d) mean estimate."""
+        n = xs.shape[0]
+        payloads, _ = self.encode_all(
+            key, xs, client_ids=client_ids, side_info=side_info
+        )
+        return self.decode(
+            key, payloads, n, client_ids=client_ids, side_info=side_info
+        )

@@ -1,0 +1,108 @@
+"""Quantizer stages: payload-array transforms (paper §7 future work —
+sparsification x quantization).
+
+A quantizer never touches the vector domain: it rewrites the VALUES arrays
+of an already-sparsified payload (indices, scales and aux stats pass
+through), declares the resulting wire format via ``transform_schema``, and
+inverts itself on the server (and inside ``self_decode``, so error feedback
+sees exactly what the server reconstructs — the residual absorbs the
+quantization error too).
+
+``Int8Quant`` uses per-chunk max scales + STOCHASTIC rounding, so any
+unbiased sparsifier composed with it stays unbiased (property-tested in
+tests/test_codec_pipeline.py). Salts for the rounding noise are stable
+per-array-name fold_in tags, identical to the historical ``payload_dtype``
+path, so migrated pipelines are bit-compatible with the old spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from .payload import SCALES, VALUES, ArraySpec
+
+# stable fold_in tags (legacy payload_dtype="int8" parity)
+_SALTS = {"vals": 101, "top_vals": 211, "rand_vals": 307}
+
+
+def _salt(name: str) -> int:
+    return _SALTS.get(name, int(zlib.crc32(name.encode()) & 0x7FFFFFF))
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Quant:
+    """bfloat16 cast of the value arrays: 2x fewer bytes, unbiased-in-
+    expectation is NOT claimed (bf16 rounding is deterministic) but the error
+    is tiny relative to sparsification noise."""
+
+    role: ClassVar[str] = "quantize"
+    name: ClassVar[str] = "bf16"
+
+    def encode(self, qkey, arrays: dict, value_names) -> dict:
+        return {
+            n: (v.astype(jnp.bfloat16) if n in value_names else v)
+            for n, v in arrays.items()
+        }
+
+    def decode(self, arrays: dict, value_names) -> dict:
+        return {
+            n: (v.astype(jnp.float32) if n in value_names else v)
+            for n, v in arrays.items()
+        }
+
+    def transform_schema(self, schema: tuple) -> tuple:
+        return tuple(
+            s._replace(dtype="bfloat16") if s.kind == VALUES else s for s in schema
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Quant:
+    """int8 + per-chunk float32 scale, stochastic rounding: E[q * scale] = v,
+    so composition with any unbiased sparsifier stays unbiased."""
+
+    role: ClassVar[str] = "quantize"
+    name: ClassVar[str] = "int8"
+
+    def encode(self, qkey, arrays: dict, value_names) -> dict:
+        out = {}
+        for n, v in arrays.items():
+            if n not in value_names:
+                out[n] = v
+                continue
+            scale = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0 + 1e-12
+            u = jax.random.uniform(jax.random.fold_in(qkey, _salt(n)), v.shape)
+            q = jnp.floor(v / scale + u)  # stochastic rounding
+            out[n] = jnp.clip(q, -128, 127).astype(jnp.int8)
+            out[n + "_scale"] = scale.astype(jnp.float32)
+        return out
+
+    def decode(self, arrays: dict, value_names) -> dict:
+        out = {}
+        for n, v in arrays.items():
+            if n.endswith("_scale"):
+                continue
+            if n in value_names:
+                out[n] = v.astype(jnp.float32) * arrays[n + "_scale"]
+            else:
+                out[n] = v
+        return out
+
+    def transform_schema(self, schema: tuple) -> tuple:
+        out = []
+        for s in schema:
+            if s.kind != VALUES:
+                out.append(s)
+                continue
+            out.append(s._replace(dtype="int8"))
+            out.append(
+                ArraySpec(s.name + "_scale", s.shape[:-1] + (1,), "float32", SCALES)
+            )
+        return tuple(out)
+
+
+QUANTIZERS = {"bfloat16": Bf16Quant, "int8": Int8Quant}

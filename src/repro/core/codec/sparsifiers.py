@@ -1,0 +1,189 @@
+"""Per-estimator sparsifier configs — the typed replacements for the
+cross-cutting fields of the deprecated ``EstimatorSpec``.
+
+Each config is a frozen dataclass carrying ONLY the fields its codec reads
+(``RandK`` has no ``transform``; ``Wangni`` owns ``capacity``; ``Induced``
+owns ``topk_frac``), and doubles as the spec object the registry codec
+implementations (``core.estimators.*``) consume — the impl functions read
+``spec.k`` / ``spec.d_block`` / etc., which are exactly these fields. The
+``payload_schema`` hook is each codec's independent declaration of its wire
+format; the ledger-honesty tests compare it against the arrays actually
+produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import ClassVar
+
+from ..estimators import base as est_base
+from .payload import AUX, INDICES, VALUES, ArraySpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Sparsifier:
+    """Base sparsifier stage: (C, d_block) chunk batch -> payload arrays."""
+
+    role: ClassVar[str] = "sparsify"
+    name: ClassVar[str] = ""
+
+    @property
+    def codec(self) -> est_base.Codec:
+        return est_base.get(self.name)
+
+    @property
+    def budget(self) -> int:
+        """Per-chunk transmitted-coordinate budget (k; d_block for identity)."""
+        return getattr(self, "k", self.d_block)
+
+    def encode(self, key, client_id, x_cd) -> dict:
+        return self.codec.encode(self, key, client_id, x_cd)
+
+    def decode(self, key, arrays, n, client_ids=None):
+        return self.codec.decode(self, key, arrays, n, client_ids=client_ids)
+
+    @property
+    def supports_self_decode(self) -> bool:
+        return self.codec.self_decode is not None
+
+    def self_decode(self, key, client_id, arrays):
+        if self.codec.self_decode is None:
+            raise ValueError(
+                f"sparsifier {self.name!r} has no per-client reconstruction "
+                "(self_decode); it cannot drive error feedback or temporal "
+                "memories"
+            )
+        return self.codec.self_decode(self, key, client_id, arrays)
+
+    def payload_schema(self, n_chunks: int) -> tuple:
+        raise NotImplementedError
+
+    def replace(self, **kw) -> "Sparsifier":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Sparsifier):
+    """Rand-k sparsification (Konecny & Richtarik 2018); indices key-derived."""
+
+    name: ClassVar[str] = "rand_k"
+    k: int = 64
+    d_block: int = 1024
+    shared_randomness: bool = True
+
+    def payload_schema(self, n_chunks: int) -> tuple:
+        return (ArraySpec("vals", (n_chunks, self.k), "float32", VALUES),)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandKSpatial(RandK):
+    """Rand-k-Spatial decoding (Jhunjhunwala et al. 2021, paper Eq. 2/3)."""
+
+    name: ClassVar[str] = "rand_k_spatial"
+    transform: str = "avg"        # one|max|avg|opt (wavg resolved by fl.server)
+    r_value: float | None = None  # oracle R for transform="opt"
+    r_mode: str = "fixed"         # fixed | est (in-decode R-hat)
+
+    def payload_schema(self, n_chunks: int) -> tuple:
+        schema = super().payload_schema(n_chunks)
+        if self.r_mode == "est":
+            schema += (ArraySpec("norm_sq", (n_chunks,), "float32", AUX),)
+        return schema
+
+
+@dataclasses.dataclass(frozen=True)
+class RandProjSpatial(RandK):
+    """Rand-Proj-Spatial family (paper Eq. 5) — the core contribution."""
+
+    name: ClassVar[str] = "rand_proj_spatial"
+    transform: str = "avg"
+    r_value: float | None = None
+    r_mode: str = "fixed"
+    decode_method: str = "gram"   # gram | direct (paper-literal d x d eigh)
+    projection: str = "srht"      # srht | subsample (Lemma 4.1) | gauss
+    beta_trials: int | None = None
+    use_pallas: str = "auto"
+
+    def payload_schema(self, n_chunks: int) -> tuple:
+        schema = (ArraySpec("vals", (n_chunks, self.k), "float32", VALUES),)
+        if self.r_mode == "est":
+            schema += (ArraySpec("norm_sq", (n_chunks,), "float32", AUX),)
+        return schema
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Sparsifier):
+    """Top-k (Shi et al. 2019): data-dependent indices DO travel."""
+
+    name: ClassVar[str] = "top_k"
+    k: int = 64
+    d_block: int = 1024
+
+    def payload_schema(self, n_chunks: int) -> tuple:
+        return (
+            ArraySpec("vals", (n_chunks, self.k), "float32", VALUES),
+            ArraySpec("idx", (n_chunks, self.k), "int32", INDICES),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Wangni(Sparsifier):
+    """Non-uniform adaptive sparsification (Wangni et al. 2018)."""
+
+    name: ClassVar[str] = "wangni"
+    k: int = 64
+    d_block: int = 1024
+    capacity: float = 1.5  # fixed-shape payload capacity multiplier
+
+    @property
+    def capacity_slots(self) -> int:
+        return int(math.ceil(self.capacity * self.k))
+
+    def payload_schema(self, n_chunks: int) -> tuple:
+        cap = self.capacity_slots
+        return (
+            ArraySpec("vals", (n_chunks, cap), "float32", VALUES),
+            ArraySpec("idx", (n_chunks, cap), "int32", INDICES),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Induced(Sparsifier):
+    """Induced compressor (Horvath & Richtarik 2021): Top-k1 + Rand-k2."""
+
+    name: ClassVar[str] = "induced"
+    k: int = 64
+    d_block: int = 1024
+    topk_frac: float = 0.5  # budget split k1 = round(topk_frac * k)
+
+    def split(self) -> tuple[int, int]:
+        k1 = max(1, int(round(self.topk_frac * self.k)))
+        k1 = min(k1, self.k - 1) if self.k > 1 else 0
+        return k1, self.k - k1
+
+    def payload_schema(self, n_chunks: int) -> tuple:
+        k1, k2 = self.split()
+        t = max(k1, 1)  # k1 == 0 still ships a (C, 1) zero placeholder
+        return (
+            ArraySpec("top_vals", (n_chunks, t), "float32", VALUES),
+            ArraySpec("top_idx", (n_chunks, t), "int32", INDICES),
+            ArraySpec("rand_vals", (n_chunks, k2), "float32", VALUES),
+            ArraySpec("rand_idx", (n_chunks, k2), "int32", INDICES),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Sparsifier):
+    """No-compression baseline: the full chunk is the payload."""
+
+    name: ClassVar[str] = "identity"
+    d_block: int = 1024
+
+    def payload_schema(self, n_chunks: int) -> tuple:
+        return (ArraySpec("vals", (n_chunks, self.d_block), "float32", VALUES),)
+
+
+SPARSIFIERS: dict[str, type] = {
+    cls.name: cls
+    for cls in (RandK, RandKSpatial, RandProjSpatial, TopK, Wangni, Induced, Identity)
+}

@@ -1,0 +1,109 @@
+"""Stage protocol + client-held state for the codec pipeline.
+
+A ``Stage`` is one orthogonal link in a compression pipeline. Four roles
+exist; a ``Pipeline`` validates at most one of each except quantizers, which
+it validates to at most one as well (stacked quantization is not a thing we
+model):
+
+    sparsify  — (C, d_block) chunks -> payload arrays (exactly one per
+                pipeline; see codec.sparsifiers)
+    quantize  — payload arrays -> smaller payload arrays (codec.quantizers)
+    feedback  — error-feedback residual carried in ClientState.ef
+    temporal  — temporal side information (client-held memory, after
+                Rand-k-Temporal, Jhunjhunwala et al. 2021)
+
+The stage hooks are ``encode`` / ``decode`` / ``self_decode`` (dataflow,
+defined per role — see sparsifiers/quantizers) and ``client_state`` (the
+per-client state a stateful stage owns). Stages are frozen dataclasses, so
+pipelines are hashable and can be closed over by jit like the old spec.
+
+``ClientState`` is the explicit home for everything a client carries across
+rounds: the EF residual and the temporal memory, each a (n_chunks, d_block)
+array per client (stacked to (n_clients, C, d) by the driver). It is a
+pytree, so cohorts vmap/slice/scatter state rows exactly like data. The
+server legitimately mirrors the temporal memory: updates depend only on
+transmitted payloads (deterministic given the shared round key), so both
+sides advance the same state without extra communication — that is what
+makes the decode's side-information add-back exact (docs/DESIGN.md §8.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ClientState:
+    """Per-client cross-round state (stacked over clients by the driver).
+
+    ``ef``      — error-feedback residual, (C, d_block) per client or None.
+    ``memory``  — temporal memory m_i, (C, d_block) per client or None.
+    """
+
+    ef: Any = None
+    memory: Any = None
+
+
+def _state_flatten(s: ClientState):
+    return (s.ef, s.memory), None
+
+
+def _state_unflatten(_, children):
+    return ClientState(ef=children[0], memory=children[1])
+
+
+jax.tree_util.register_pytree_node(ClientState, _state_flatten, _state_unflatten)
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedback:
+    """Error-feedback stage: the client adds its residual to the input before
+    encoding and keeps ``input - self_decode(payload)`` as the next residual,
+    so mass a (semi-)biased codec drops is retransmitted until it lands.
+    Residuals live in ``ClientState.ef`` — one row per client, so EF composes
+    with heterogeneous budgets (each client's residual follows its own k_i)
+    and with partial participation (non-participants' rows carry over).
+    """
+
+    role: ClassVar[str] = "feedback"
+    name: ClassVar[str] = "error_feedback"
+
+    def client_state(self, n_chunks: int, d_block: int):
+        return jnp.zeros((n_chunks, d_block), jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Temporal:
+    """Temporal side-information stage.
+
+    ``per_client=True`` (default) is TRUE Rand-k-Temporal: client i encodes
+    ``x_i - m_i`` against its OWN memory, and both sides advance
+    ``m_i' = m_i + eta * self_decode(payload_i)`` — a deterministic function
+    of the transmitted payload, so the server's mirror never desyncs. With
+    Rand-k and ``eta = k/d`` (the ``eta=None`` default) this is exactly the
+    paper's coordinate-replacement rule: (k/d) * (d/k) * scatter(vals) sets
+    the transmitted coordinates to their fresh values. The server adds back
+    the SURVIVORS' mean memory, which keeps the decode unbiased:
+    mean(x_i) = mean(x_i - m_i) + mean(m_i).
+
+    ``per_client=False`` is the broadcast variant (the server's previous
+    estimate as everyone's side information) — equivalent to
+    ``RoundConfig(temporal=True)``, kept for comparison.
+    """
+
+    role: ClassVar[str] = "temporal"
+    name: ClassVar[str] = "temporal"
+
+    per_client: bool = True
+    eta: float | None = None  # None -> budget / d_block (coordinate replacement)
+
+    def client_state(self, n_chunks: int, d_block: int):
+        if not self.per_client:
+            return None
+        return jnp.zeros((n_chunks, d_block), jnp.float32)
+
+    def resolve_eta(self, budget: int, d_block: int) -> float:
+        return self.eta if self.eta is not None else budget / d_block

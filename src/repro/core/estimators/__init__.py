@@ -1,4 +1,9 @@
-"""Estimator registry. Importing this package registers all codecs."""
+"""Estimator registry. Importing this package registers all codecs.
+
+The estimator *API* moved to ``repro.core.codec`` (composable pipelines with
+typed payloads); this package keeps the registered codec implementations and
+the deprecated ``EstimatorSpec`` shim plus its functional wrappers.
+"""
 from . import identity, induced, rand_k, rand_k_spatial, rand_proj_spatial, top_k, wangni  # noqa: F401
 from .base import (  # noqa: F401
     Codec,
@@ -10,4 +15,5 @@ from .base import (  # noqa: F401
     mean_estimate,
     names,
     register,
+    self_decode,
 )

@@ -1,40 +1,48 @@
-"""Estimator spec + registry.
+"""Codec registry + the deprecated flat ``EstimatorSpec`` shim.
 
-Every estimator is a pair of pure functions
+The estimator API lives in ``repro.core.codec`` now: a typed ``Payload``
+container, per-estimator config dataclasses, and a composable ``Pipeline``
+of stages (sparsifier / quantizer / error feedback / temporal). This module
+keeps two things:
 
-    encode(spec, key, client_id, x_cd)               : (C, d) -> payload pytree
-    decode(spec, key, payloads, n, client_ids=None)  : stacked payloads
-                                                       (leading n) -> (C, d)
+1. **The registry** — each codec implementation module registers a ``Codec``
+   (pure ``encode`` / ``decode`` / ``self_decode`` functions) under its
+   name. Implementations consume the typed sparsifier configs (they read
+   ``spec.k`` / ``spec.d_block`` / ...), and the shared-randomness key
+   derivation helpers (``client_key`` / ``chunk_key``) stay here: the round
+   key is shared by clients and server, per-client randomness is
+   ``fold_in(key, client_id)``, so indices/signs/seeds are never transmitted
+   (docs/DESIGN.md §3.6).
 
-- ``key`` is the *round* key, shared by every client and the server
-  (deterministic shared randomness: per-client randomness is re-derived as
-  fold_in(key, client_id), so index/sign/seed information is never
-  transmitted — see docs/DESIGN.md §3.6).
-- Payloads are pytrees of arrays with identical structure across clients, so
-  they stack/all-gather cleanly.
-- ``client_ids`` decouples key derivation from payload position: when only a
-  subset of clients participates in a round (partial participation, straggler
-  drops — repro.fl), the server decodes the survivors' payloads with their
-  *actual* ids so the re-derived randomness matches what each client used,
-  and normalises by the actual participant count n.
-- ``side_info`` is the temporal-correlation hook (docs/DESIGN.md §8.2, after
-  Rand-k-Temporal): clients encode x_i - side, the server adds side back to
-  the decoded delta mean. Any unbiased codec stays unbiased and its MSE
-  scales with ||x_i - side||^2 instead of ||x_i||^2.
-- ``mean_estimate`` is the one-shot convenience used by benchmarks/tests and
-  by the paper-style DME drivers.
+2. **The deprecation shim** — ``EstimatorSpec`` still constructs (emitting
+   one ``DeprecationWarning`` per process) and every module-level function
+   (``encode`` / ``decode`` / ``encode_all`` / ``mean_estimate`` /
+   ``self_decode``) accepts an ``EstimatorSpec``, a sparsifier config, or a
+   ``Pipeline``, normalising through ``codec.as_pipeline``. Existing call
+   sites keep working unchanged during migration; new code should construct
+   pipelines directly (see docs/DESIGN.md §3.0 for the field-by-field
+   migration table).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
 class EstimatorSpec:
+    """DEPRECATED flat estimator config — use ``repro.core.codec`` instead.
+
+    Construction converts 1:1 to a ``Pipeline`` via ``codec.as_pipeline``:
+    ``name``/``k``/``d_block``/... pick the sparsifier config,
+    ``payload_dtype`` becomes a quantizer stage, ``ef`` becomes an
+    ``ErrorFeedback`` stage. Kept so pre-migration call sites (and the
+    examples that demonstrate the shim) run unmodified.
+    """
+
     name: str = "rand_proj_spatial"
     k: int = 64                      # per-client per-chunk budget
     d_block: int = 1024              # chunk size (power of two)
@@ -46,28 +54,52 @@ class EstimatorSpec:
     projection: str = "srht"         # srht | subsample (Lemma 4.1) | gauss
     beta_trials: int | None = None   # None -> adaptive default
     use_pallas: str = "auto"         # auto | force | never
-    wangni_capacity: float = 1.5     # payload capacity multiplier (see wangni.py)
-    induced_topk_frac: float = 0.5   # budget split for the induced compressor
-    ef: bool = False                 # error-feedback residual (train-loop level)
-    # payload quantization (paper §7 future work: sparsification x quantization):
-    # float32 | bfloat16 | int8. int8 uses per-chunk scales + STOCHASTIC
-    # rounding, so the composed estimator stays unbiased (tested).
-    payload_dtype: str = "float32"
+    wangni_capacity: float = 1.5     # -> codec.Wangni(capacity=...)
+    induced_topk_frac: float = 0.5   # -> codec.Induced(topk_frac=...)
+    ef: bool = False                 # -> codec.ErrorFeedback() stage
+    payload_dtype: str = "float32"   # -> codec.Bf16Quant() / codec.Int8Quant()
+
+    def __post_init__(self):
+        _warn_deprecated_once()
 
     def replace(self, **kw) -> "EstimatorSpec":
         return dataclasses.replace(self, **kw)
+
+
+_DEPRECATION_MSG = (
+    "EstimatorSpec is deprecated; compose a repro.core.codec Pipeline instead "
+    "(codec.build(name, **old_kwargs) is the drop-in constructor; see "
+    "docs/DESIGN.md §3.0 for the migration table)"
+)
+_warned_deprecated = False
+
+
+def _warn_deprecated_once() -> None:
+    global _warned_deprecated
+    if _warned_deprecated:
+        return
+    # Latch only AFTER the warn call returns: under -W error::DeprecationWarning
+    # (the CI `deprecations` job) warn() raises and the latch stays unset, so
+    # EVERY stray first-party construction errors no matter what ran before it
+    # — the latch cannot be consumed by an earlier allowlisted test.
+    # stacklevel: user code -> generated __init__ -> __post_init__ -> here
+    warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=4)
+    _warned_deprecated = True
+
+
+def _reset_deprecation_warning_for_tests() -> None:
+    global _warned_deprecated
+    _warned_deprecated = False
 
 
 @dataclasses.dataclass(frozen=True)
 class Codec:
     encode: Callable[..., Any]
     decode: Callable[..., Any]
-    # self_decode(spec, key, client_id, payload) -> (C, d): the client's own
-    # reconstruction of what the server received from it — used by error
-    # feedback (residual = input - self_decode). Only meaningful for (semi-)
-    # biased codecs (top_k, wangni, induced).
+    # self_decode(spec, key, client_id, arrays) -> (C, d): the client's own
+    # reconstruction of what the server received from it — drives error
+    # feedback, temporal memories, and the FL server's correlation tracker.
     self_decode: Callable[..., Any] | None = None
-    bits_per_client: Callable[[EstimatorSpec, int], int] | None = None
 
 
 _REGISTRY: dict[str, Codec] = {}
@@ -95,88 +127,42 @@ def chunk_key(ckey, chunk_id):
     return jax.random.fold_in(ckey, chunk_id)
 
 
-_VAL_KEYS = ("vals", "top_vals", "rand_vals")
-_VAL_SALT = {"vals": 101, "top_vals": 211, "rand_vals": 307}  # stable fold_in tags
+# --------------------------------------------------------------------------
+# Functional convenience API. Accepts EstimatorSpec | sparsifier config |
+# Pipeline; thin delegation to repro.core.codec (imported lazily — codec
+# imports this module for the registry).
 
 
-def _quantize_payload(spec: EstimatorSpec, key, payload: dict) -> dict:
-    if spec.payload_dtype == "float32":
-        return payload
-    out = {}
-    for name, v in payload.items():
-        if name not in _VAL_KEYS:
-            out[name] = v
-            continue
-        if spec.payload_dtype == "bfloat16":
-            out[name] = v.astype(jnp.bfloat16)
-        elif spec.payload_dtype == "int8":
-            scale = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0 + 1e-12
-            u = jax.random.uniform(jax.random.fold_in(key, _VAL_SALT[name]), v.shape)
-            q = jnp.floor(v / scale + u)  # stochastic rounding: E[q*scale] = v
-            out[name] = jnp.clip(q, -128, 127).astype(jnp.int8)
-            out[name + "_scale"] = scale.astype(jnp.float32)
-        else:
-            raise ValueError(spec.payload_dtype)
-    return out
+def _pipe(spec):
+    from .. import codec
+
+    return codec.as_pipeline(spec)
 
 
-def _dequantize_payload(spec: EstimatorSpec, payload: dict) -> dict:
-    if spec.payload_dtype == "float32":
-        return payload
-    out = {}
-    for name, v in payload.items():
-        if name.endswith("_scale"):
-            continue
-        if name in _VAL_KEYS:
-            if spec.payload_dtype == "bfloat16":
-                out[name] = v.astype(jnp.float32)
-            else:
-                out[name] = v.astype(jnp.float32) * payload[name + "_scale"]
-        else:
-            out[name] = v
-    return out
+def encode(spec, key, client_id, x_cd, side_info=None):
+    return _pipe(spec).encode(key, client_id, x_cd, side_info=side_info)[0]
 
 
-def encode(spec: EstimatorSpec, key, client_id, x_cd: jnp.ndarray, side_info=None):
-    if side_info is not None:
-        x_cd = x_cd - side_info
-    payload = get(spec.name).encode(spec, key, client_id, x_cd)
-    return _quantize_payload(spec, client_key(key, client_id), payload)
-
-
-def decode(
-    spec: EstimatorSpec, key, payloads, n: int, client_ids=None, side_info=None
-) -> jnp.ndarray:
-    out = get(spec.name).decode(
-        spec, key, _dequantize_payload(spec, payloads), n, client_ids=client_ids
+def decode(spec, key, payloads, n: int, client_ids=None, side_info=None):
+    return _pipe(spec).decode(
+        key, payloads, n, client_ids=client_ids, side_info=side_info
     )
-    if side_info is not None:
-        out = out + side_info
-    return out
 
 
-def self_decode(spec: EstimatorSpec, key, client_id, payload) -> jnp.ndarray:
-    codec = get(spec.name)
-    if codec.self_decode is None:
-        raise ValueError(f"estimator {spec.name!r} does not support error feedback")
-    return codec.self_decode(spec, key, client_id, _dequantize_payload(spec, payload))
+def self_decode(spec, key, client_id, payload):
+    return _pipe(spec).self_decode(key, client_id, payload)
 
 
-def encode_all(spec: EstimatorSpec, key, xs: jnp.ndarray, client_ids=None,
-               side_info=None):
-    """xs: (n, C, d) -> stacked payloads (leading n).
-
-    ``client_ids`` (n,) overrides the default 0..n-1 identity assignment —
-    used when xs holds only the participating subset of a larger cohort.
-    """
-    n = xs.shape[0]
-    ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
-    return jax.vmap(lambda i, x: encode(spec, key, i, x, side_info=side_info))(ids, xs)
+def encode_all(spec, key, xs, client_ids=None, side_info=None):
+    """xs: (n, C, d) -> stacked payloads (leading n)."""
+    payloads, _ = _pipe(spec).encode_all(
+        key, xs, client_ids=client_ids, side_info=side_info
+    )
+    return payloads
 
 
-def mean_estimate(spec: EstimatorSpec, key, xs: jnp.ndarray, client_ids=None,
-                  side_info=None) -> jnp.ndarray:
+def mean_estimate(spec, key, xs, client_ids=None, side_info=None):
     """One-shot DME: xs (n, C, d) client chunks -> (C, d) mean estimate."""
-    n = xs.shape[0]
-    payloads = encode_all(spec, key, xs, client_ids=client_ids, side_info=side_info)
-    return decode(spec, key, payloads, n, client_ids=client_ids, side_info=side_info)
+    return _pipe(spec).mean_estimate(
+        key, xs, client_ids=client_ids, side_info=side_info
+    )

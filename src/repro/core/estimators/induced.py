@@ -2,7 +2,7 @@
 
 C(x) = Top_{k1}(x) + RandK_{k2}(x - Top_{k1}(x)) * (d/k2)-scaled — unbiased,
 because the Rand-k stage is an unbiased estimator of the Top-k residual.
-Budget split k1 = round(induced_topk_frac * k), k2 = k - k1.
+Budget split k1 = round(topk_frac * k), k2 = k - k1.
 """
 from __future__ import annotations
 
@@ -13,7 +13,7 @@ from . import base, top_k
 
 
 def _split(spec):
-    k1 = max(1, int(round(spec.induced_topk_frac * spec.k)))
+    k1 = max(1, int(round(spec.topk_frac * spec.k)))
     k1 = min(k1, spec.k - 1) if spec.k > 1 else 0
     return k1, spec.k - k1
 
@@ -49,4 +49,18 @@ def decode(spec, key, payloads, n, client_ids=None):
     return top + (d / k2) * rand
 
 
-base.register("induced", base.Codec(encode=encode, decode=decode))
+def self_decode(spec, key, client_id, payload):
+    """Unbiased per-client reconstruction: Top part is exact, Rand part is the
+    (d/k2)-scaled scatter — composes with error feedback / state stages."""
+    _, k2 = _split(spec)
+    d = spec.d_block
+    top = top_k.scatter_mean(payload["top_vals"][None], payload["top_idx"][None], 1, d)
+    rand = top_k.scatter_mean(
+        payload["rand_vals"][None], payload["rand_idx"][None], 1, d
+    )
+    return top + (d / k2) * rand
+
+
+base.register(
+    "induced", base.Codec(encode=encode, decode=decode, self_decode=self_decode)
+)

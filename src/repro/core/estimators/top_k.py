@@ -1,6 +1,6 @@
 """Top-k sparsification (Shi et al. 2019): largest-|x| coordinates.
 
-Biased; pairs with error feedback (spec.ef) in the training loop. Indices are
+Biased; pairs with an ErrorFeedback stage in the training loop. Indices are
 data-dependent so they are transmitted (int32 per coordinate), unlike the
 seed-derived Rand-k / SRHT payloads.
 """

@@ -7,7 +7,7 @@ solving sum_j min(1, |x_j|/tau) = k; we solve it with a fixed number of
 saturation iterations (the paper's iterative greedy algorithm, jit-friendly).
 
 Payload-shape note: Bernoulli selection has variable size; for fixed-shape
-collectives we allocate capacity ceil(wangni_capacity * k) and drop overflow
+collectives we allocate capacity ceil(capacity * k) and drop overflow
 (lowest-|value| survivors dropped first). Overflow is rare for the optimal
 p (E[count] = k, var <= k); drops introduce a tiny bias which we accept and
 document — the estimator is a baseline from the paper's comparison set.
@@ -43,7 +43,7 @@ def probabilities(x_d: jnp.ndarray, k: int) -> jnp.ndarray:
 
 
 def capacity(spec) -> int:
-    return int(math.ceil(spec.wangni_capacity * spec.k))
+    return int(math.ceil(spec.capacity * spec.k))
 
 
 def encode(spec, key, client_id, x_cd):

@@ -22,7 +22,8 @@ VARIANTS = ("one", "max", "avg", "opt")
 # "wavg" — the practical Rand-Proj-Spatial(wavg) variant — is a round-level
 # policy, not a transform: the FL server tracks R online (EMA of r_exact over
 # per-client reconstructions, repro.fl.server) and resolves wavg to
-# opt(r_value=R_hat), falling back to avg while no history exists. It must be
+# opt(r_value=R_hat) by rewriting the pipeline's sparsifier config
+# (resolve_pipeline), falling back to avg while no history exists. It must be
 # resolved before the decode graph is built, hence not listed in VARIANTS.
 
 
@@ -41,7 +42,7 @@ def rho_for(transform: str, n: int, r_value=None):
     if transform == "wavg":
         raise ValueError(
             "transform='wavg' is resolved by the FL server (repro.fl.server."
-            "resolve_spec) into opt/avg before decode; it cannot be used "
+            "resolve_pipeline) into opt/avg before decode; it cannot be used "
             "directly in an estimator decode graph"
         )
     raise ValueError(f"unknown transform {transform!r}; pick from {VARIANTS}")

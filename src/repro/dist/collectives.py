@@ -2,24 +2,30 @@
 exchange.
 
 ``compressed_mean_tree`` is the reference (GSPMD) path: ravel each client's
-pytree, chunk to ``spec.d_block`` (core.chunking), run the per-chunk
-estimator encode at every client (honouring ``payload_dtype``, ``use_pallas``
-and error-feedback residuals), decode the cross-client mean once at the
-"server", and unravel back to the tree. Only the encoded payloads are
-notionally transmitted; ``info`` carries the exact byte accounting
-(Konecny & Richtarik 2016-style accuracy-vs-communication bookkeeping).
+pytree, chunk to ``d_block`` (core.chunking), run the codec pipeline's
+encode at every client (sparsifier + quantizer stages + error-feedback
+residuals), decode the cross-client mean once at the "server", and unravel
+back to the tree. Only the encoded payloads are notionally transmitted;
+``info`` carries the exact byte accounting, read straight off the payload's
+self-described ledger (``payload.meta`` — Konecny & Richtarik 2016-style
+accuracy-vs-communication bookkeeping).
 
 ``compressed_mean_tree_shardmap`` is the explicit-collective path: clients
 live on mesh ``client_axes``; each shard encodes its local clients' chunks,
-payloads cross the wire via ``all_gather`` (payload-sized traffic — the whole
-point of the estimator), and every shard decodes the identical mean.
+payloads cross the wire via ``all_gather`` (payload-sized traffic — the
+whole point of the estimator), and every shard decodes the identical mean.
 
-Error feedback (``spec.ef``): residual buffers are (n_clients, C, d_block)
-chunk arrays threaded by the caller (train_state["ef"]); the residual is
-rebuilt from the codec's self-decode so its support is exactly the
-untransmitted coordinates. On the shard_map path each residual row lives with
-its client's shard (P(client_axes, None, None)) — no residual state ever
-crosses the wire.
+Both entry points accept any codec-like object — a ``codec.Pipeline``, a
+bare sparsifier config, or the deprecated ``EstimatorSpec`` (normalised via
+``codec.as_pipeline``).
+
+Error feedback (an ``ErrorFeedback`` stage in the pipeline): residual
+buffers are (n_clients, C, d_block) chunk arrays threaded by the caller
+(train_state["ef"] / ``ClientState.ef`` rows); the residual is rebuilt from
+the pipeline's self-decode so its support is exactly the untransmitted
+coordinates. On the shard_map path each residual row lives with its client's
+shard (P(client_axes, None, None)) — no residual state ever crosses the
+wire.
 
 Partial participation (``participants``): a concrete (host-side) index array
 naming the clients that actually report this round (repro.fl samples these).
@@ -39,7 +45,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import chunking
-from ..core.estimators import base as est_base
+from ..core.codec import as_pipeline
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,28 +90,16 @@ def _chunk_clients(tree, d_block: int):
     return chunks, restore, n
 
 
-def payload_nbytes_per_client(payloads) -> int:
-    """Exact wire bytes per client from the (static) payload shapes/dtypes.
-
-    Payload leaves are stacked with a leading client axis; indices derived
-    from the shared round key (rand_k / SRHT) never appear in the payload, so
-    this is the true transmitted size, scales/indices included when present.
-    """
-    total = 0
-    for leaf in jax.tree.leaves(payloads):
-        total += int(np.prod(leaf.shape[1:], dtype=np.int64)) * leaf.dtype.itemsize
-    return total
-
-
-def _info(spec, n: int, d_flat: int, n_chunks: int, payloads,
-          n_total: int | None = None) -> dict:
-    per_client = payload_nbytes_per_client(payloads)
+def _info(pipe, n: int, d_flat: int, n_chunks: int, n_total: int | None = None) -> dict:
+    # declared ledger from the payload schema; the ledger-honesty tests pin
+    # it to the actual array bytes, so declared == transmitted.
+    per_client = pipe.payload_nbytes(n_chunks)
     return {
         "n_clients": n,
         "n_total": n if n_total is None else n_total,  # rows in the input tree
         "n_chunks": n_chunks,
         "d_flat": d_flat,
-        "d_block": spec.d_block,
+        "d_block": pipe.d_block,
         "full_bytes": d_flat * 4,  # uncompressed float32 exchange baseline
         "payload_bytes_per_client": per_client,
         "bytes_sent": per_client * n,
@@ -130,14 +124,16 @@ def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
 
     tree leaves: (n_clients, ...). Returns (mean_tree, info, ef_next) where
     mean_tree drops the client axis, info is static byte/payload accounting,
-    and ef_next is the updated (n, C, d_block) residual (None unless spec.ef).
+    and ef_next is the updated (n, C, d_block) residual (None unless the
+    pipeline has an ErrorFeedback stage).
 
     ``participants``: concrete index array / bool mask of reporting clients.
     Only they encode; decode uses their actual client ids and n = how many
     actually reported. ef_next keeps the FULL (n_clients, ...) shape — rows of
     non-participants carry over unchanged.
     """
-    chunks, restore, n_total = _chunk_clients(tree, spec.d_block)
+    pipe = as_pipeline(spec)
+    chunks, restore, n_total = _chunk_clients(tree, pipe.d_block)
     if participants is None:
         ids = None
         part_chunks, n = chunks, n_total
@@ -147,22 +143,22 @@ def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
     if shardings is not None:
         part_chunks = shardings.constrain(part_chunks)
     x = part_chunks
-    if spec.ef:
+    if pipe.has_ef:
         if ef_chunks is None:
             ef_chunks = jnp.zeros_like(chunks)
         x = part_chunks + (ef_chunks if ids is None else ef_chunks[ids])
 
-    payloads = est_base.encode_all(spec, key, x, client_ids=ids)
+    payloads, _ = pipe.encode_all(key, x, client_ids=ids)
     if shardings is not None:
         payloads = shardings.constrain_tree(payloads)
-    mean_chunks = est_base.decode(spec, key, payloads, n, client_ids=ids)
+    mean_chunks = pipe.decode_payload(key, payloads, n, client_ids=ids)
     mean_tree = restore(mean_chunks)
 
     ef_next = None
-    if spec.ef:
+    if pipe.has_ef:
         id_arr = jnp.arange(n) if ids is None else jnp.asarray(ids)
         self_dec = jax.vmap(
-            lambda i, p: est_base.self_decode(spec, key, i, p)
+            lambda i, p: pipe.self_decode(key, i, p)
         )(id_arr, payloads)
         resid = x - self_dec
         ef_next = resid if ids is None else ef_chunks.at[jnp.asarray(ids)].set(resid)
@@ -170,7 +166,7 @@ def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
     d_flat = sum(
         int(np.prod(leaf.shape[1:], dtype=np.int64)) for leaf in jax.tree.leaves(tree)
     )
-    return mean_tree, _info(spec, n, d_flat, chunks.shape[1], payloads,
+    return mean_tree, _info(pipe, n, d_flat, chunks.shape[1],
                             n_total=n_total), ef_next
 
 
@@ -186,10 +182,10 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
     Requires n_clients divisible by the client-axes extent; falls back to the
     GSPMD path otherwise.
 
-    Error feedback (spec.ef): ``ef_chunks`` (n, C, d_block) is sharded over
-    the client axis, so each residual row lives with its client's shard and
-    never crosses the wire; the updated residual returns with the same
-    sharding. Parity with the GSPMD path is asserted by
+    Error feedback (ErrorFeedback stage): ``ef_chunks`` (n, C, d_block) is
+    sharded over the client axis, so each residual row lives with its
+    client's shard and never crosses the wire; the updated residual returns
+    with the same sharding. Parity with the GSPMD path is asserted by
     tests/test_error_feedback.py.
 
     ``participants``: concrete ids/mask of reporting clients. Every shard
@@ -200,6 +196,7 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
     """
     from jax.experimental.shard_map import shard_map
 
+    pipe = as_pipeline(spec)
     client_axes = tuple(a for a in client_axes if a in mesh.axis_names)
     n = jax.tree.leaves(grads)[0].shape[0]
     n_shards = 1
@@ -207,7 +204,7 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
         n_shards *= mesh.shape[a]
     if not client_axes or n % n_shards != 0:
         return compressed_mean_tree(
-            spec, key, grads, dme_shardings(mesh, client_axes),
+            pipe, key, grads, dme_shardings(mesh, client_axes),
             ef_chunks=ef_chunks, participants=participants,
         )
     n_local = n // n_shards
@@ -220,14 +217,14 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
         part_mask[part_ids] = True
 
     template = _client_slice(grads, 0)
-    _, restore = chunking.tree_chunk(template, spec.d_block)
+    _, restore = chunking.tree_chunk(template, pipe.d_block)
     d_flat = sum(
         int(np.prod(leaf.shape[1:], dtype=np.int64)) for leaf in jax.tree.leaves(grads)
     )
-    n_chunks = chunking.num_chunks(d_flat, spec.d_block)
-    if spec.ef and ef_chunks is None:
-        ef_chunks = jnp.zeros((n, n_chunks, spec.d_block), jnp.float32)
-    use_ef = spec.ef
+    n_chunks = chunking.num_chunks(d_flat, pipe.d_block)
+    if pipe.has_ef and ef_chunks is None:
+        ef_chunks = jnp.zeros((n, n_chunks, pipe.d_block), jnp.float32)
+    use_ef = pipe.has_ef
 
     def local_fn(key, g_local, ef_local):
         shard_idx = jnp.zeros((), jnp.int32)
@@ -235,29 +232,29 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
             shard_idx = shard_idx * mesh.shape[a] + jax.lax.axis_index(a)
         ids = shard_idx * n_local + jnp.arange(n_local)
         chunks = jax.vmap(
-            lambda i: chunking.tree_chunk(_client_slice(g_local, i), spec.d_block)[0]
+            lambda i: chunking.tree_chunk(_client_slice(g_local, i), pipe.d_block)[0]
         )(jnp.arange(n_local))
         x = chunks + ef_local if use_ef else chunks
         payloads = jax.vmap(
-            lambda i, c: est_base.encode(spec, key, i, c)
+            lambda i, c: pipe.encode_payload(key, i, c)
         )(ids, x)
         gathered = jax.tree.map(
             lambda leaf: jax.lax.all_gather(leaf, client_axes, axis=0, tiled=True),
             payloads,
         )
         if part_ids is None:
-            mean_chunks = est_base.decode(spec, key, gathered, n)
+            mean_chunks = pipe.decode_payload(key, gathered, n)
         else:
             selected = jax.tree.map(lambda leaf: leaf[part_ids], gathered)
-            mean_chunks = est_base.decode(
-                spec, key, selected, n_eff, client_ids=part_ids
+            mean_chunks = pipe.decode_payload(
+                key, selected, n_eff, client_ids=part_ids
             )
         if not use_ef:
             return restore(mean_chunks), ef_local
         # residual update stays on the client's shard; non-participants keep
         # their residual (they did not transmit this round)
         self_dec = jax.vmap(
-            lambda i, p: est_base.self_decode(spec, key, i, p)
+            lambda i, p: pipe.self_decode(key, i, p)
         )(ids, payloads)
         resid = x - self_dec
         local_part = jnp.take(jnp.asarray(part_mask), ids)
@@ -280,9 +277,4 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
     if not use_ef:
         ef_next = None
 
-    pay_abs = jax.eval_shape(
-        lambda c: est_base.encode_all(spec, jax.random.key(0), c),
-        jax.ShapeDtypeStruct((n_eff, n_chunks, spec.d_block), jnp.float32),
-    )
-    return mean_tree, _info(spec, n_eff, d_flat, n_chunks, pay_abs,
-                            n_total=n), ef_next
+    return mean_tree, _info(pipe, n_eff, d_flat, n_chunks, n_total=n), ef_next

@@ -9,5 +9,5 @@ decoding, a round driver with exact payload-byte accounting, and the paper's
 """
 from .clients import Cohort, Participation, partition  # noqa: F401
 from .rounds import History, RoundConfig, run_rounds  # noqa: F401
-from .server import ServerState, resolve_spec  # noqa: F401
+from .server import ServerState, resolve_pipeline, resolve_spec  # noqa: F401
 from .tasks import TASKS, Task, get_task  # noqa: F401

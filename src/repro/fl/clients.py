@@ -9,7 +9,12 @@ cohorts are decoded per budget group, docs/DESIGN.md §8.3).
 Sampling is host-side numpy (deterministic in (seed, round)) because the set
 of participants must be CONCRETE: payload stacks are shaped by who reports,
 and the decode re-derives each survivor's randomness from its actual client
-id (core.estimators base ``client_ids``).
+id (``client_ids`` in the codec pipeline).
+
+Client-held cross-round state (error-feedback residuals, per-client temporal
+memories) lives in a stacked ``codec.ClientState`` created by
+``Cohort.init_state`` — one row per client, sliced/scattered by the round
+driver as participation dictates.
 
 Data partition helpers implement the two non-IID schemes used by the paper's
 §5 tasks and by Jhunjhunwala et al. 2021: label-band (label-sorted contiguous
@@ -70,6 +75,18 @@ class Cohort:
         if not alive.any():
             alive[rng.integers(n_sampled)] = True
         return Participation(sampled=sampled, survivors=sampled[alive])
+
+    def init_state(self, pipe, n_chunks: int):
+        """Stacked per-client ``codec.ClientState`` for this cohort (EF
+        residual rows + temporal memories), or None for stateless pipelines.
+
+        This is where client-held state lives in the simulation: row i IS
+        client i's state, and doubles as the server's mirror (temporal memory
+        updates are deterministic functions of transmitted payloads, so both
+        sides agree — docs/DESIGN.md §8.2)."""
+        from ..core.codec import as_pipeline
+
+        return as_pipeline(pipe).init_client_state(self.n_clients, n_chunks)
 
     def budget_groups(self, ids: np.ndarray, default_k: int):
         """Group client ids by their budget k_i -> [(k, ids_with_that_k), ...].

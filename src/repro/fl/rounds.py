@@ -4,19 +4,29 @@ One ``run_rounds`` call plays ``n_rounds`` of
 
     1. clients compute their round vectors          (task.client_vectors)
     2. the server samples participants; some drop   (cohort.sample_round)
-    3. survivors chunk + encode (optionally against the server's previous
-       estimate — temporal side information)        (core.estimators)
-    4. every transmitted payload byte is ledgered   (Konecny & Richtarik-style
+    3. survivors chunk + encode through the codec pipeline — optionally
+       against side information: the server's previous estimate (broadcast
+       temporal) or each client's own memory in ClientState (true per-client
+       Rand-k-Temporal)                             (core.codec)
+    4. every transmitted payload byte is ledgered straight off the payload's
+       self-described schema                        (Konecny & Richtarik-style
        accuracy-vs-communication accounting)
     5. the server decodes the survivors' mean — renormalising by who actually
        reported, with their actual client ids, per budget group
     6. the server updates its correlation tracker and temporal state
     7. the task advances                            (task.step)
 
-Backends: "local" drives core.estimators directly (CPU-friendly, supports
-heterogeneous per-client budgets); "gspmd" and "shard_map" route step 3-5
-through repro.dist.collectives on a mesh (uniform budgets) — the same math,
-with payload-sized cross-device traffic on the shard_map path.
+``spec`` may be a ``codec.Pipeline``, a bare sparsifier config, or the
+deprecated ``EstimatorSpec``. Heterogeneous budgets and error feedback
+compose on EVERY backend now: budget groups are decoded independently (the
+group's budget rides in each payload's meta), EF residual rows live per
+client in ``ClientState.ef`` and follow their own k_i.
+
+Backends: "local" drives the pipeline directly (CPU-friendly; the only
+backend for per-client temporal memories, which need the driver to mirror
+each client's state); "gspmd" and "shard_map" route steps 3-5 through
+repro.dist.collectives on a mesh — the same math, with payload-sized
+cross-device traffic on the shard_map path.
 """
 from __future__ import annotations
 
@@ -28,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import chunking, correlation
-from ..core.estimators import base as est_base
+from ..core.codec import ClientState, as_pipeline
 from ..dist import collectives
 from . import server as server_lib
 from .clients import Cohort
@@ -39,7 +49,7 @@ from .tasks import Task
 class RoundConfig:
     n_rounds: int = 20
     seed: int = 0
-    temporal: bool = False      # decode deltas against the previous estimate
+    temporal: bool = False      # broadcast temporal: decode deltas vs prev estimate
     track_r: bool | None = None  # default: only for transform="wavg"
     r_gamma: float = 0.3
     backend: str = "local"      # local | gspmd | shard_map
@@ -57,6 +67,7 @@ class History:
     n_survivors: list = dataclasses.field(default_factory=list)
     n_sampled: list = dataclasses.field(default_factory=list)
     rho_hat: list = dataclasses.field(default_factory=list)  # tracker output (or nan)
+    client_state: Any = None  # final stacked ClientState (None if stateless)
 
     @property
     def total_bytes(self) -> int:
@@ -71,41 +82,127 @@ class History:
         return None
 
 
-def _payload_bytes(payloads) -> int:
-    return collectives.payload_nbytes_per_client(payloads)
+def _should_track(pipe, cfg) -> bool:
+    return cfg.track_r if cfg.track_r is not None else pipe.transform == "wavg"
 
 
-def _should_track(spec, cfg) -> bool:
-    return cfg.track_r if cfg.track_r is not None else spec.transform == "wavg"
+def _scatter_rows(full, rows, ids_j):
+    """Scatter updated per-client rows (a ClientState slice) back into the
+    full stacked state; None subtrees pass through."""
+    return jax.tree.map(lambda f, r: f.at[ids_j].set(r), full, rows)
 
 
-def _decode_local(spec, key, xs_chunks, part, cohort, state_srv, cfg):
-    """Budget-grouped encode/decode over the survivors. xs_chunks: (n, C, d).
+def _group_local(pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate):
+    """One budget group on the local backend. Returns (group mean, updated
+    full ClientState, stacked payloads for the tracker)."""
+    ids_j = jnp.asarray(ids_g)
+    st_g = None
+    if cstate is not None:
+        st_g = jax.tree.map(lambda a: a[ids_j], cstate)
+    payloads, st_new = pipe_g.encode_all(
+        key, xs_chunks[ids_g], client_ids=ids_j, side_info=side, states=st_g
+    )
+    if st_new is not None:
+        cstate = _scatter_rows(cstate, st_new, ids_j)
+    dec_side = side
+    if mem_snapshot is not None:
+        # per-client temporal: the server adds back the SURVIVORS' mean
+        # memory (its mirror of the clients' side information)
+        dec_side = jnp.mean(mem_snapshot[ids_j], axis=0)
+    dec = pipe_g.decode(
+        key, payloads, len(ids_g), client_ids=ids_j, side_info=dec_side
+    )
+    return dec, cstate, payloads
 
-    Returns (mean_chunks, bytes_sent, rho_round)."""
-    side = server_lib.side_info_for(spec, state_srv, cfg.temporal)
-    groups = cohort.budget_groups(part.survivors, spec.k)
-    track = _should_track(spec, cfg)
+
+def _group_dist(pipe_g, key, xs_chunks, ids_g, side, cstate, cfg):
+    """One budget group through dist.collectives (gspmd / shard_map)."""
+    delta = xs_chunks if side is None else xs_chunks - side[None]
+    tree = {"x": delta}
+    ef_arr = cstate.ef if (cstate is not None and pipe_g.has_ef) else None
+    if cfg.backend == "shard_map":
+        if cfg.mesh is None:
+            raise ValueError("backend='shard_map' needs cfg.mesh")
+        mean_tree, info, ef_next = collectives.compressed_mean_tree_shardmap(
+            pipe_g, key, tree, cfg.mesh, client_axes=cfg.client_axes,
+            participants=ids_g, ef_chunks=ef_arr,
+        )
+    else:
+        shardings = collectives.dme_shardings(cfg.mesh, cfg.client_axes)
+        mean_tree, info, ef_next = collectives.compressed_mean_tree(
+            pipe_g, key, tree, shardings, participants=ids_g, ef_chunks=ef_arr,
+        )
+    if ef_next is not None:
+        cstate = ClientState(ef=ef_next, memory=cstate.memory)
+    mean_g = mean_tree["x"]
+    if side is not None:
+        mean_g = mean_g + side
+    return mean_g, cstate, info["bytes_sent"], delta
+
+
+def _measure_rho_dist(pipe_g, key, delta, ids_g, cstate):
+    """The collectives paths keep payloads internal, so the tracker re-derives
+    them (same key/ids/side/residual => identical payloads). Costs one extra
+    encode of the group's survivors — payload-sized, server-side."""
+    ids_j = jnp.asarray(ids_g)
+    enc_in = delta[ids_g]
+    if pipe_g.has_ef and cstate is not None and cstate.ef is not None:
+        # ``cstate`` is the PRE-update state (the residual the clients added
+        # before encoding), so the re-derived payloads match what was sent.
+        enc_in = enc_in + cstate.ef[ids_j]
+    payloads, _ = pipe_g.encode_all(key, enc_in, client_ids=ids_j)
+    return server_lib.measure_rho(pipe_g, key, payloads, ids_g)
+
+
+def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate):
+    """Budget-grouped encode/decode over the survivors on any backend.
+
+    Returns (mean_chunks, bytes_sent, rho_round, cstate)."""
+    groups = cohort.budget_groups(part.survivors, pipe.k)
+    track = _should_track(pipe, cfg)
     n_eff = part.n_survivors
+    n_chunks = xs_chunks.shape[1]
+
+    mem_snapshot = None
+    side = None
+    if pipe.has_client_temporal:
+        mem_snapshot = cstate.memory  # pre-update: what clients encode against
+    elif cfg.temporal or (pipe.temporal_stage is not None):
+        side = server_lib.side_info_for(state_srv, temporal=True)
+
     mean_chunks, bytes_sent, rho_parts = None, 0, []
     for k_g, ids_g in groups:
         if len(ids_g) == 0:
             continue
-        spec_g = server_lib.resolve_spec(spec.replace(k=k_g), state_srv, len(ids_g))
-        ids_j = jnp.asarray(ids_g)
-        payloads = est_base.encode_all(
-            spec_g, key, xs_chunks[ids_g], client_ids=ids_j, side_info=side
+        pre_state = cstate
+        pipe_g = server_lib.resolve_pipeline(
+            pipe.with_budget(k_g), state_srv, len(ids_g)
         )
-        bytes_sent += _payload_bytes(payloads) * len(ids_g)
-        dec = est_base.decode(
-            spec_g, key, payloads, len(ids_g), client_ids=ids_j, side_info=side
-        )
+        if cfg.backend == "local":
+            dec, cstate, payloads = _group_local(
+                pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate
+            )
+            bytes_sent += pipe_g.payload_nbytes(n_chunks) * len(ids_g)
+            rho_g = (
+                server_lib.measure_rho(pipe_g, key, payloads, ids_g)
+                if track else None
+            )
+        elif cfg.backend in ("gspmd", "shard_map"):
+            dec, cstate, nbytes_g, delta = _group_dist(
+                pipe_g, key, xs_chunks, ids_g, side, cstate, cfg
+            )
+            bytes_sent += nbytes_g
+            rho_g = (
+                _measure_rho_dist(pipe_g, key, delta, ids_g, pre_state)
+                if track else None
+            )
+        else:
+            raise ValueError(f"unknown backend {cfg.backend!r}")
         w = len(ids_g) / n_eff
         mean_chunks = dec * w if mean_chunks is None else mean_chunks + dec * w
-        if track:
-            rho_g = server_lib.measure_rho(spec_g, key, payloads, ids_g)
-            if rho_g is not None:
-                rho_parts.append((rho_g, len(ids_g)))
+        if rho_g is not None:
+            rho_parts.append((rho_g, len(ids_g)))
+
     # one EMA step per ROUND: combine the groups' measurements weighted by
     # participant count (more clients => tighter estimate)
     rho_round = None
@@ -113,94 +210,45 @@ def _decode_local(spec, key, xs_chunks, part, cohort, state_srv, cfg):
         wsum = sum(w for _, w in rho_parts)
         rho_round = sum(r * w for r, w in rho_parts) / wsum
         server_lib.ema_update(state_srv, rho_round, gamma=cfg.r_gamma)
-    return mean_chunks, bytes_sent, rho_round
-
-
-def _decode_dist(spec, key, xs_chunks, part, state_srv, cfg, ef_chunks=None):
-    """Collectives-backed decode (uniform budgets): the gspmd/shard_map
-    backends, and the local backend whenever spec.ef is set (error-feedback
-    residual threading lives in dist.collectives; without a mesh the gspmd
-    path is plain single-process math)."""
-    side = server_lib.side_info_for(spec, state_srv, cfg.temporal)
-    spec_r = server_lib.resolve_spec(spec, state_srv, part.n_survivors)
-    delta = xs_chunks if side is None else xs_chunks - side[None]
-    tree = {"x": delta}
-    if cfg.backend == "shard_map":
-        if cfg.mesh is None:
-            raise ValueError("backend='shard_map' needs cfg.mesh")
-        mean_tree, info, ef_next = collectives.compressed_mean_tree_shardmap(
-            spec_r, key, tree, cfg.mesh, client_axes=cfg.client_axes,
-            participants=part.survivors, ef_chunks=ef_chunks,
-        )
-    else:
-        shardings = collectives.dme_shardings(cfg.mesh, cfg.client_axes)
-        mean_tree, info, ef_next = collectives.compressed_mean_tree(
-            spec_r, key, tree, shardings, participants=part.survivors,
-            ef_chunks=ef_chunks,
-        )
-    mean_chunks = mean_tree["x"]
-    if side is not None:
-        mean_chunks = mean_chunks + side
-    rho_round = None
-    if _should_track(spec, cfg):
-        # the collectives paths keep payloads internal, so the tracker
-        # re-derives them (same key/ids/side/residual => identical payloads).
-        # Costs one extra encode of the survivors — payload-sized, server-side.
-        ids = part.survivors
-        enc_in = delta[ids]
-        if spec_r.ef and ef_chunks is not None:
-            enc_in = enc_in + ef_chunks[ids]
-        payloads = est_base.encode_all(
-            spec_r, key, enc_in, client_ids=jnp.asarray(ids)
-        )
-        rho_round = server_lib.measure_rho(spec_r, key, payloads, ids)
-        if rho_round is not None:
-            server_lib.ema_update(state_srv, rho_round, gamma=cfg.r_gamma)
-    return mean_chunks, info["bytes_sent"], rho_round, ef_next
+    return mean_chunks, bytes_sent, rho_round, cstate
 
 
 def run_rounds(task: Task, spec, cohort: Cohort | None = None,
                cfg: RoundConfig = RoundConfig()):
-    """Drive ``cfg.n_rounds`` federated rounds of ``task`` under ``spec``.
+    """Drive ``cfg.n_rounds`` federated rounds of ``task`` under ``spec`` (a
+    codec Pipeline, sparsifier config, or deprecated EstimatorSpec).
 
     Returns (final task state, History). The recorded per-round ``mse`` is
     against the SURVIVORS' true mean — the quantity the estimator actually
     targets once stragglers are dropped.
     """
+    pipe = as_pipeline(spec)
     cohort = cohort or Cohort(n_clients=task.n_clients)
     if cohort.n_clients != task.n_clients:
         raise ValueError("cohort and task disagree on n_clients")
-    if cohort.budgets is not None and cfg.backend != "local":
-        raise ValueError("heterogeneous budgets require backend='local'")
-    if spec.ef and cohort.budgets is not None:
-        raise ValueError("error feedback with heterogeneous budgets is not "
-                         "supported yet (see ROADMAP)")
+    if pipe.has_client_temporal and cfg.backend != "local":
+        raise ValueError(
+            "per-client temporal memories (codec.Temporal(per_client=True)) "
+            "require backend='local': the driver mirrors each client's "
+            "ClientState row"
+        )
 
     key = jax.random.key(cfg.seed)
     state = task.init(key)
     state_srv = server_lib.ServerState()
     hist = History()
-    ef_chunks = None  # (n, C, d_block) residuals, threaded when spec.ef
+    n_chunks = chunking.num_chunks(task.dim, pipe.d_block)
+    cstate = cohort.init_state(pipe, n_chunks)
 
     for t in range(cfg.n_rounds):
         rkey = jax.random.fold_in(key, t)
         vecs = task.client_vectors(state, rkey)  # (n, dim)
         part = cohort.sample_round(cfg.seed, t)
-        xs_chunks = jax.vmap(lambda v: chunking.chunk(v, spec.d_block))(vecs)
+        xs_chunks = jax.vmap(lambda v: chunking.chunk(v, pipe.d_block))(vecs)
 
-        if cfg.backend == "local" and not spec.ef:
-            mean_chunks, nbytes, rho_round = _decode_local(
-                spec, rkey, xs_chunks, part, cohort, state_srv, cfg
-            )
-        elif cfg.backend in ("local", "gspmd", "shard_map"):
-            # EF residual threading always goes through dist.collectives
-            # (without a mesh the gspmd path is plain single-process math)
-            mean_chunks, nbytes, rho_round, ef_chunks = _decode_dist(
-                spec, rkey, xs_chunks, part, state_srv, cfg,
-                ef_chunks=ef_chunks,
-            )
-        else:
-            raise ValueError(f"unknown backend {cfg.backend!r}")
+        mean_chunks, nbytes, rho_round, cstate = _decode_round(
+            pipe, rkey, xs_chunks, part, cohort, state_srv, cfg, cstate
+        )
 
         true_mean = jnp.mean(xs_chunks[part.survivors], axis=0)
         hist.mse.append(float(correlation.mse(mean_chunks, true_mean)))
@@ -216,4 +264,5 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
             float("nan") if task.metric is None else task.metric(state)
         )
 
+    hist.client_state = cstate
     return state, hist

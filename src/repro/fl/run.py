@@ -6,9 +6,13 @@
     # paper Fig. 3/4-style comparison (same keys => paired across estimators):
     PYTHONPATH=src python -m repro.fl.run --task dme --rho 0.95 --compare
 
-    # temporal decoding on a slowly-drifting task:
+    # temporal decoding on a slowly-drifting task (broadcast side info):
     PYTHONPATH=src python -m repro.fl.run --task drift --estimator \
         rand_proj_spatial --temporal
+
+    # TRUE per-client Rand-k-Temporal (client-held memories in ClientState):
+    PYTHONPATH=src python -m repro.fl.run --task drift --estimator rand_k \
+        --client-temporal
 
 Per-round lines report the task metric, the MSE against the survivors' true
 mean, and the cumulative payload-byte ledger; --compare prints an
@@ -20,13 +24,13 @@ import argparse
 
 import numpy as np
 
-from ..core import EstimatorSpec
+from ..core import codec
 from . import rounds as rounds_lib
 from .clients import Cohort
 from .tasks import get_task
 
 COMPARE = [
-    ("rand_k", dict(transform="one")),
+    ("rand_k", dict()),
     ("rand_k_spatial", dict(transform="avg")),
     ("rand_proj_spatial", dict(transform="avg")),
 ]
@@ -49,6 +53,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dropout", type=float, default=0.0)
     ap.add_argument("--temporal", action="store_true",
                     help="decode deltas against the server's previous estimate")
+    ap.add_argument("--client-temporal", action="store_true",
+                    help="true per-client temporal memories (codec.Temporal)")
+    ap.add_argument("--ef", action="store_true",
+                    help="error-feedback stage (residuals in ClientState)")
+    ap.add_argument("--payload-dtype", default="float32",
+                    choices=["float32", "bfloat16", "int8"],
+                    help="quantizer stage appended to the pipeline")
     ap.add_argument("--backend", default="local",
                     choices=["local", "gspmd", "shard_map"])
     ap.add_argument("--rho", type=float, default=0.9, help="dme/drift correlation")
@@ -86,7 +97,13 @@ def make_task(args):
 def run_one(task, args, name, est_kw):
     d_block = args.d_block or min(1024, max(64, 1 << (task.dim - 1).bit_length()))
     k = args.k or max(1, d_block // 10)
-    spec = EstimatorSpec(name=name, k=k, d_block=d_block, **est_kw)
+    spec = codec.build(
+        name, k=k, d_block=d_block,
+        payload_dtype=getattr(args, "payload_dtype", "float32"),
+        ef=getattr(args, "ef", False),
+        temporal=getattr(args, "client_temporal", False),
+        **est_kw,
+    )
     cohort = Cohort(n_clients=task.n_clients, participation=args.participation,
                     dropout=args.dropout)
     mesh = None
@@ -115,7 +132,7 @@ def report(task, spec, hist, verbose=True):
     mean_mse = float(np.nanmean(hist.mse))
     final = ("" if task.metric is None
              else f"final_{task.metric_name}={hist.metric[-1]:.5f}  ")
-    print(f"{task.name:20s} {spec.name}({spec.transform})  k={spec.k} "
+    print(f"{task.name:20s} {spec.name}({spec.transform or '-'})  k={spec.k} "
           f"d_block={spec.d_block}  rounds={len(hist.mse)}  "
           f"{final}mean_mse={mean_mse:.6f}  total_bytes={hist.total_bytes}")
     return mean_mse
@@ -129,7 +146,7 @@ def main(argv=None) -> int:
         results = {}
         for name, kw in COMPARE:
             spec, _, hist = run_one(task, args, name, kw)
-            results[f"{name}({kw.get('transform')})"] = (
+            results[f"{name}({kw.get('transform', '-')})"] = (
                 report(task, spec, hist, verbose=False), hist.total_bytes
             )
         print("\nMSE at equal bytes (same k, same round keys):")

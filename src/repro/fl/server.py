@@ -6,29 +6,30 @@ legitimately sees (payloads and its own decode history):
 1. **Online cross-client correlation tracking** — the Rand-Proj-Spatial(Opt)
    transform needs the true correlation R (paper Eq. 7), which no real server
    knows. After each decode we reconstruct every participant's unbiased
-   contribution with the codec's ``self_decode`` (the server's view of client
-   i), apply ``core.correlation.r_exact`` to that decoded history, and track
-   an EMA across rounds. The cross terms of r_exact are unbiased (independent
-   per-client randomness), but compression noise inflates the denominator
-   Sum ||x_hat_i||^2 by exactly d/k for the Rand-k / SRHT family
-   (G G^T = I_k for SRHT rows, so E||G^T G x||^2 = (k/d) d/k^2 ... = (d/k)
-   ||x||^2), so we rescale by that known factor before the EMA. Residual
-   ratio bias is small and toward 0 — the tracker underclaims, never
-   overclaims, correlation.
+   contribution with the pipeline's ``self_decode`` (the server's view of
+   client i), apply ``core.correlation.r_exact`` to that decoded history, and
+   track an EMA across rounds. The cross terms of r_exact are unbiased
+   (independent per-client randomness), but compression noise inflates the
+   denominator Sum ||x_hat_i||^2 by exactly d/k for the Rand-k / SRHT family
+   (G G^T = I_k for SRHT rows, so E||G^T G x||^2 = (d/k) ||x||^2), so we
+   rescale by that known factor before the EMA. Residual ratio bias is small
+   and toward 0 — the tracker underclaims, never overclaims, correlation.
 
 2. **The practical Rand-Proj-Spatial(wavg) variant** — when true correlation
    is unavailable, ``transform="wavg"`` resolves per round to
    Opt(r_value=R_ema) once the tracker warms up, falling back to the paper's
    Avg interpolation for the first rounds. Resolution happens here, before
-   any decode graph is built (core.transforms rejects raw "wavg").
+   any decode graph is built (core.transforms rejects raw "wavg"):
+   ``resolve_pipeline`` rewrites the pipeline's SPARSIFIER config — the
+   stage-based API makes the rewrite local to one stage.
 
 3. **Temporal-correlation decoding** (à la Rand-k-Temporal, Jhunjhunwala et
-   al. 2021) — the server's previous-round estimate is the side information:
-   clients encode x_i - y_{t-1}, the server decodes the delta mean and adds
-   y_{t-1} back (core.estimators ``side_info`` hook). On slowly-drifting
-   workloads ||x_i - y_{t-1}|| << ||x_i||, so the same payload bytes buy a
-   much smaller MSE; the spatial transform then exploits whatever cross-
-   client correlation the *deltas* retain.
+   al. 2021) — the broadcast variant: the server's previous-round estimate is
+   everyone's side information; clients encode x_i - y_{t-1}, the server adds
+   y_{t-1} back to the decoded delta mean. TRUE per-client temporal memories
+   live in ``codec.ClientState`` (a ``Temporal`` stage in the pipeline) and
+   are driven by ``fl.rounds`` — the server's role there is adding back the
+   survivors' mean memory and mirroring the deterministic memory updates.
 """
 from __future__ import annotations
 
@@ -39,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import correlation
-from ..core.estimators import base as est_base
+from ..core.codec import as_pipeline
 
 
 @dataclasses.dataclass
@@ -52,57 +53,66 @@ class ServerState:
     r_history: list = dataclasses.field(default_factory=list)
 
 
-def resolve_spec(spec, state: ServerState, n_eff: int):
+def resolve_pipeline(pipe, state: ServerState, n_eff: int):
     """Round-level resolution of the practical wavg variant.
 
     wavg -> Opt(R_ema) once correlation history exists, else Avg. R is
     re-expressed for the round's participant count: r_exact was measured over
     n_meas clients but rho = R/(n_eff - 1) must use this round's n_eff, so we
-    track rho directly (see update_correlation) and scale back.
+    track rho directly (see ema_update) and scale back. Sparsifiers without a
+    ``transform`` field (rand_k, top_k, ...) pass through untouched.
     """
+    pipe = as_pipeline(pipe)
     if n_eff < 2:
         # singleton decode: no cross-client correlation to exploit, and the
         # avg/opt interpolations are undefined at n=1 (rho = R/(n-1))
-        return spec.replace(transform="one", r_value=None)
-    if spec.transform != "wavg":
-        return spec
+        return pipe.replace_sparsifier(
+            _ignore_missing=True, transform="one", r_value=None
+        )
+    if pipe.transform != "wavg":
+        return pipe
     if state.r_ema is None:
-        return spec.replace(transform="avg")
+        return pipe.replace_sparsifier(transform="avg")
     r = float(np.clip(state.r_ema, 0.0, 1.0)) * (n_eff - 1.0)
-    return spec.replace(transform="opt", r_value=r)
+    return pipe.replace_sparsifier(transform="opt", r_value=r)
 
 
-def side_info_for(spec, state: ServerState, temporal: bool):
-    """Previous-round estimate as side information (None on round 0)."""
+# deprecated-name alias (pre-pipeline API); accepts spec or pipeline, returns
+# a Pipeline either way.
+resolve_spec = resolve_pipeline
+
+
+def side_info_for(state: ServerState, temporal: bool):
+    """Previous-round estimate as broadcast side information (None round 0)."""
     if not temporal or state.prev_mean is None:
         return None
     return state.prev_mean
 
 
-def measure_rho(spec, key, payloads, ids) -> float | None:
+def measure_rho(pipe, key, payloads, ids) -> float | None:
     """One group's rho = R/(n-1) measurement from this round's payloads.
 
-    Reconstructs each participant's unbiased contribution via self_decode and
-    measures r_exact over the stack. Returns the estimate (rho, in [0, 1]) or
-    None when the codec has no per-client reconstruction or n < 2. Pure
-    measurement — the cross-round EMA is ``ema_update`` (one step per round,
-    however many budget groups contributed).
+    Reconstructs each participant's unbiased contribution via the pipeline's
+    self_decode and measures r_exact over the stack. Returns the estimate
+    (rho, in [0, 1]) or None when the codec has no per-client reconstruction
+    or n < 2. Pure measurement — the cross-round EMA is ``ema_update`` (one
+    step per round, however many budget groups contributed).
     """
-    codec = est_base.get(spec.name)
-    if codec.self_decode is None:
+    pipe = as_pipeline(pipe)
+    if not pipe.sparsifier.supports_self_decode:
         return None
     n = len(ids)
     if n < 2:
         return None
     id_arr = jnp.asarray(np.asarray(ids))
     recon = jax.vmap(
-        lambda i, p: est_base.self_decode(spec, key, i, p)
+        lambda i, p: pipe.self_decode(key, i, p)
     )(id_arr, payloads)  # (n, C, d)
     # de-inflate the denominator: E||self_decode||^2 = (d/k) ||x||^2 for the
     # unbiased sparsifying family, = ||x||^2 for the identity baseline
     scale = 1.0
-    if spec.name in ("rand_k", "rand_k_spatial", "rand_proj_spatial"):
-        scale = spec.d_block / spec.k
+    if pipe.name in ("rand_k", "rand_k_spatial", "rand_proj_spatial"):
+        scale = pipe.d_block / pipe.k
     r_round = float(correlation.r_exact(recon)) * scale
     return float(np.clip(r_round / (n - 1.0), 0.0, 1.0))
 

@@ -263,13 +263,20 @@ def dme(n_clients=8, d=256, rho=0.9, seed=0) -> Task:
     )
 
 
-def drift(n_clients=8, d=256, rho=0.95, omega=0.03, seed=0) -> Task:
+def drift(n_clients=8, d=256, rho=0.95, omega=0.03, client_bias=0.0,
+          seed=0) -> Task:
     """Slowly-drifting common component: u(t) rotates by ~omega rad/round.
 
     Per-round ||u(t) - u(t-1)|| ~= omega << 1 = ||u(t)||, so a temporal
     decoder that encodes deltas against the server's previous estimate spends
     its k on a vector ~1/omega times smaller — the Rand-k-Temporal argument.
     Fresh per-round client noise keeps the task honest (the delta is never 0).
+
+    ``client_bias`` > 0 adds a PERSISTENT per-client offset b_i (unit vector
+    scaled by client_bias): x_i(t) = u(t) + b_i + sigma eps_i(t). Broadcast
+    temporal decoding cannot capture b_i (the server's estimate carries only
+    mean(b)); per-client temporal memories can — this is the workload where
+    true Rand-k-Temporal separates from the broadcast variant.
     """
     rng = np.random.default_rng(seed)
     u0 = rng.standard_normal(d)
@@ -279,6 +286,9 @@ def drift(n_clients=8, d=256, rho=0.95, omega=0.03, seed=0) -> Task:
     u1 /= np.linalg.norm(u1)
     u0_j, u1_j = jnp.asarray(u0, jnp.float32), jnp.asarray(u1, jnp.float32)
     sigma = float(np.sqrt(1.0 / rho - 1.0)) if rho > 0 else 10.0
+    b = rng.standard_normal((n_clients, d))
+    b = client_bias * b / np.linalg.norm(b, axis=1, keepdims=True)
+    b_j = jnp.asarray(b, jnp.float32)
 
     def init(key):
         return {"t": 0, "mean": jnp.zeros(d)}
@@ -287,7 +297,7 @@ def drift(n_clients=8, d=256, rho=0.95, omega=0.03, seed=0) -> Task:
         t = state["t"]
         u_t = jnp.cos(omega * t) * u0_j + jnp.sin(omega * t) * u1_j
         eps = jax.random.normal(key, (n_clients, d)) / jnp.sqrt(d)
-        return u_t[None] + sigma * eps
+        return u_t[None] + b_j + sigma * eps
 
     def step(state, mean):
         return {"t": state["t"] + 1, "mean": mean}
@@ -295,7 +305,8 @@ def drift(n_clients=8, d=256, rho=0.95, omega=0.03, seed=0) -> Task:
     return Task(
         name="drift", n_clients=n_clients, dim=d, init=init,
         client_vectors=client_vectors, step=step, metric=None,
-        metric_name="mse", aux={"rho": rho, "omega": omega},
+        metric_name="mse", aux={"rho": rho, "omega": omega,
+                                "client_bias": client_bias},
     )
 
 

@@ -29,7 +29,7 @@ from ..dist import sharding as shard_lib
 from ..models import transformer
 from ..optim import AdamW
 from ..train import make_train_step
-from ..core.estimators import EstimatorSpec
+from ..core import codec
 from . import hlo_stats, specs
 from .mesh import make_production_mesh
 
@@ -67,8 +67,8 @@ def _cell_fn_and_args(cfg, shape_name, mesh, dme: str, knobs: dict):
             n_clients = 1
             for a in client_axes:
                 n_clients *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
-            spec = EstimatorSpec(
-                name=knobs.get("estimator", "rand_proj_spatial"),
+            spec = codec.build(
+                knobs.get("estimator", "rand_proj_spatial"),
                 k=knobs.get("k", 64),
                 d_block=knobs.get("d_block", 1024),
                 transform=knobs.get("transform", "avg"),

@@ -20,7 +20,7 @@ import os
 import jax
 
 from .. import configs
-from ..core.estimators import EstimatorSpec
+from ..core import codec
 from ..data import SyntheticLM
 from ..models import init_params
 from ..optim import AdamW
@@ -79,8 +79,8 @@ def main(argv=None):
 
     dme = None
     if args.clients:
-        dme = EstimatorSpec(name=args.estimator, k=args.k, d_block=args.d_block,
-                            transform=args.transform, ef=args.ef)
+        dme = codec.build(args.estimator, k=args.k, d_block=args.d_block,
+                          transform=args.transform, ef=args.ef)
 
     def make_step(n_clients):
         spec = dme

@@ -4,16 +4,18 @@ optimizer.
 Two modes:
   - dme_spec=None: standard GSPMD step; gradient reduction over all DP axes
     is the implicit (uncompressed) all-reduce. This is the roofline BASELINE.
-  - dme_spec=EstimatorSpec(...): the batch carries a leading client axis
-    (sharded over `client_axes`, default the 'pod' mesh axis). Per-client
-    grads come from vmap (no cross-client reduction is ever materialised);
-    the cross-client mean is the paper's estimator via
-    dist.collectives.compressed_mean_tree. In-pod reduction (the 'data'
-    axis inside each client slice) stays an uncompressed fast-ICI psum.
+  - dme_spec=<codec Pipeline | sparsifier config | legacy EstimatorSpec>:
+    the batch carries a leading client axis (sharded over `client_axes`,
+    default the 'pod' mesh axis). Per-client grads come from vmap (no
+    cross-client reduction is ever materialised); the cross-client mean is
+    the paper's estimator via dist.collectives.compressed_mean_tree. In-pod
+    reduction (the 'data' axis inside each client slice) stays an
+    uncompressed fast-ICI psum.
 
-Error feedback (spec.ef=True, Top-k-style biased codecs): a per-client
-residual buffer lives in train_state["ef"], added to the gradient before
-encoding and rebuilt from the codec's self-decode after.
+Error feedback (an ErrorFeedback stage in the pipeline, Top-k-style biased
+codecs): a per-client residual buffer lives in train_state["ef"], added to
+the gradient before encoding and rebuilt from the pipeline's self-decode
+after.
 """
 from __future__ import annotations
 
@@ -22,7 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..core.estimators import base as est_base
+from ..core.codec import as_pipeline
 from ..dist import collectives
 from ..models import transformer
 
@@ -33,20 +35,24 @@ def _loss(params, cfg, batch):
 
 def init_train_state(cfg, optimizer, params, dme_spec=None, n_clients: int = 0):
     state = {"opt": optimizer.init(params)}
-    if dme_spec is not None and dme_spec.ef:
-        from jax.flatten_util import ravel_pytree
+    if dme_spec is not None:
+        pipe = as_pipeline(dme_spec)
+        if pipe.has_ef:
+            from jax.flatten_util import ravel_pytree
 
-        from ..core import chunking
+            from ..core import chunking
 
-        d_flat = ravel_pytree(params)[0].shape[0]
-        c = chunking.num_chunks(d_flat, dme_spec.d_block)
-        state["ef"] = jnp.zeros((n_clients, c, dme_spec.d_block), jnp.float32)
+            d_flat = ravel_pytree(params)[0].shape[0]
+            c = chunking.num_chunks(d_flat, pipe.d_block)
+            state["ef"] = jnp.zeros((n_clients, c, pipe.d_block), jnp.float32)
     return state
 
 
 def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
                     client_axes=("pod",), seed: int = 0, dme_impl: str = "auto"):
     base_key = jax.random.key(seed)
+    if dme_spec is not None:
+        dme_spec = as_pipeline(dme_spec)
 
     if dme_spec is None:
 

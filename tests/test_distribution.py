@@ -13,7 +13,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
-from repro.core import EstimatorSpec
+from repro.core import codec
 from repro.data import SyntheticLM
 from repro.dist import collectives
 from repro.dist.sharding import MODEL_PREF, spec_for
@@ -50,7 +50,7 @@ def test_compressed_mean_identity_is_exact():
         "w": jnp.asarray(np.random.default_rng(0).standard_normal((3, 8, 8)), jnp.float32),
         "b": jnp.asarray(np.random.default_rng(1).standard_normal((3, 5)), jnp.float32),
     }
-    spec = EstimatorSpec(name="identity", d_block=64)
+    spec = codec.build("identity", d_block=64)
     mean, info, _ = collectives.compressed_mean_tree(spec, jax.random.key(0), tree)
     np.testing.assert_allclose(np.asarray(mean["w"]), np.asarray(tree["w"].mean(0)), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(mean["b"]), np.asarray(tree["b"].mean(0)), rtol=1e-6)
@@ -61,7 +61,7 @@ def test_compressed_mean_unbiased_full_budget():
     """k == d_block: SRHT is invertible per client => exact mean recovery."""
     n, d = 4, 64
     tree = {"w": jnp.asarray(np.random.default_rng(2).standard_normal((n, d)), jnp.float32)}
-    spec = EstimatorSpec(name="rand_proj_spatial", k=d, d_block=d, transform="max")
+    spec = codec.build("rand_proj_spatial", k=d, d_block=d, transform="max")
     mean, _, _ = collectives.compressed_mean_tree(spec, jax.random.key(1), tree)
     np.testing.assert_allclose(
         np.asarray(mean["w"]), np.asarray(tree["w"].mean(0)), rtol=1e-3, atol=1e-4
@@ -80,7 +80,7 @@ def test_dme_train_step_matches_plain_with_identity():
 
     plain = jax.jit(make_train_step(cfg, opt))
     dme = jax.jit(make_train_step(
-        cfg, opt, dme_spec=EstimatorSpec(name="identity", d_block=1024)))
+        cfg, opt, dme_spec=codec.build("identity", d_block=1024)))
 
     p1, s1, m1 = plain(params, {"opt": opt.init(params)}, flat_batch, 0)
     p2, s2, m2 = dme(params, {"opt": opt.init(params)}, batch, 0)
@@ -105,7 +105,7 @@ def test_dme_train_step_compressed_converges_direction():
         return jax.grad(lambda p: transformer.loss_fn(p, cfg, b)[0])(params)
 
     grads = jax.vmap(per_client)(batch)
-    spec = EstimatorSpec(name="rand_proj_spatial", k=256, d_block=512, transform="avg")
+    spec = codec.build("rand_proj_spatial", k=256, d_block=512, transform="avg")
     mean_hat, _, _ = collectives.compressed_mean_tree(spec, jax.random.key(3), grads)
     true_mean = jax.tree.map(lambda g: g.mean(0), grads)
     gh, _ = ravel_pytree(mean_hat)
@@ -124,7 +124,7 @@ _SUBPROC = textwrap.dedent(
     from repro.launch import specs
     from repro.optim import AdamW
     from repro.train import make_train_step
-    from repro.core.estimators import EstimatorSpec
+    from repro.core import codec
 
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = configs.reduce_for_smoke(configs.get_config("{arch}")).replace(
@@ -132,7 +132,7 @@ _SUBPROC = textwrap.dedent(
     opt = AdamW()
     params = specs.params_specs(cfg, mesh)
     state = {{"opt": specs.opt_state_specs(opt, params)}}
-    spec = EstimatorSpec(name="rand_proj_spatial", k=16, d_block=128, use_pallas="never")
+    spec = codec.build("rand_proj_spatial", k=16, d_block=128, use_pallas="never")
     fn = make_train_step(cfg, opt, dme_spec=spec, mesh=mesh, client_axes=("pod",))
     import jax.numpy as jnp
     batch = {{

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EstimatorSpec
+from repro.core import codec
 from repro.dist import collectives
 
 
@@ -13,7 +13,7 @@ def test_ef_residual_is_input_minus_self_decode():
     n, d, k = 3, 64, 8
     rng = np.random.default_rng(0)
     tree = {"w": jnp.asarray(rng.standard_normal((n, d)), jnp.float32)}
-    spec = EstimatorSpec(name="top_k", k=k, d_block=d, ef=True)
+    spec = codec.build("top_k", k=k, d_block=d, ef=True)
     ef0 = jnp.zeros((n, 1, d))
     mean, info, ef1 = collectives.compressed_mean_tree(
         spec, jax.random.key(0), tree, ef_chunks=ef0
@@ -38,7 +38,7 @@ def test_ef_accumulates_missed_mass_over_rounds():
     base[:k] = 3.0       # dominant coords hog top-k
     base[k] = 1.0        # persistently-missed coordinate; residual grows +1/round
     tree = {"w": jnp.asarray(np.tile(base, (n, 1)))}
-    spec = EstimatorSpec(name="top_k", k=k, d_block=d, ef=True)
+    spec = codec.build("top_k", k=k, d_block=d, ef=True)
     ef = jnp.zeros((n, 1, d))
     seen = 0.0
     for t in range(8):
@@ -64,7 +64,7 @@ def test_shardmap_ef_matches_gspmd():
     tree = {"w": jnp.asarray(rng.standard_normal((n, d)), jnp.float32)}
     mesh = jax.make_mesh((1,), ("pod",))
     for name in ("top_k", "rand_proj_spatial"):
-        spec = EstimatorSpec(name=name, k=k, d_block=d, ef=True,
+        spec = codec.build(name, k=k, d_block=d, ef=True,
                              use_pallas="never")
         ef_a = ef_b = jnp.zeros((n, 1, d))
         for t in range(3):
@@ -91,7 +91,7 @@ def test_shardmap_ef_with_partial_participation():
     rng = np.random.default_rng(4)
     tree = {"w": jnp.asarray(rng.standard_normal((n, d)), jnp.float32)}
     mesh = jax.make_mesh((1,), ("pod",))
-    spec = EstimatorSpec(name="top_k", k=k, d_block=d, ef=True)
+    spec = codec.build("top_k", k=k, d_block=d, ef=True)
     ef0 = jnp.asarray(rng.standard_normal((n, 1, d)), jnp.float32)
     surv = np.array([0, 2])
     mean_a, _, ef_a = collectives.compressed_mean_tree(

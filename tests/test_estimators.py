@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import EstimatorSpec, chunking, correlation, mean_estimate
+from repro.core import chunking, codec, correlation, mean_estimate
 from repro.core import beta as beta_lib
 from repro.core.estimators import decode, encode_all
 
@@ -65,7 +65,7 @@ UNBIASED = [
 def test_unbiasedness(name, kw):
     n, d, k = 8, 128, 8
     xs = make_clients("generic", n, d)
-    spec = EstimatorSpec(name=name, k=k, d_block=d, **kw)
+    spec = codec.build(name, k=k, d_block=d, **kw)
     xhs, _ = run_trials(spec, xs, trials=600)
     xbar = np.asarray(jnp.mean(xs, axis=0))
     err = np.abs(xhs.mean(0) - xbar)
@@ -77,7 +77,7 @@ def test_unbiasedness(name, kw):
 def test_rand_k_mse_matches_eq1():
     n, d, k = 8, 128, 8
     xs = make_clients("generic", n, d)
-    spec = EstimatorSpec(name="rand_k", k=k, d_block=d)
+    spec = codec.build("rand_k", k=k, d_block=d)
     _, mses = run_trials(spec, xs, trials=1500)
     norm_sq = float(jnp.sum(xs.astype(jnp.float32) ** 2))
     want = (1 / n**2) * (d / k - 1) * norm_sq
@@ -89,7 +89,7 @@ def test_thm_4_3_full_correlation():
     """Identical vectors, T=id ('max'): MSE ~= (d/(nk) - 1) ||x||^2."""
     n, d, k = 8, 128, 8
     xs = make_clients("identical", n, d)
-    spec = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=d, transform="max")
+    spec = codec.build("rand_proj_spatial", k=k, d_block=d, transform="max")
     _, mses = run_trials(spec, xs, trials=400)
     norm_sq = float(jnp.sum(xs[0].astype(jnp.float32) ** 2))
     want = (d / (n * k) - 1) * norm_sq
@@ -105,7 +105,7 @@ def test_thm_4_4_no_correlation():
     """Orthogonal vectors, T==1 ('one'): MSE == Rand-k's Eq. 1."""
     n, d, k = 8, 128, 8
     xs = make_clients("orthogonal", n, d)
-    spec = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=d, transform="one")
+    spec = codec.build("rand_proj_spatial", k=k, d_block=d, transform="one")
     _, mses = run_trials(spec, xs, trials=1000)
     norm_sq = float(jnp.sum(xs.astype(jnp.float32) ** 2))
     want = (1 / n**2) * (d / k - 1) * norm_sq
@@ -117,11 +117,11 @@ def test_lemma_4_1_subsample_recovers_rand_k_spatial():
     n, d, k = 6, 64, 4
     xs = make_clients("generic", n, d)
     key = jax.random.key(7)
-    s_proj = EstimatorSpec(
-        name="rand_proj_spatial", k=k, d_block=d, transform="avg",
+    s_proj = codec.build(
+        "rand_proj_spatial", k=k, d_block=d, transform="avg",
         projection="subsample", decode_method="direct",
     )
-    s_spatial = EstimatorSpec(name="rand_k_spatial", k=k, d_block=d, transform="avg")
+    s_spatial = codec.build("rand_k_spatial", k=k, d_block=d, transform="avg")
     # NOTE: identical randomness requires identical index derivation; both
     # derive rows via permutation(client_key)[:k], so payload contents match.
     a = mean_estimate(s_proj, key, xs)
@@ -140,13 +140,13 @@ def test_lemma_4_1_property_over_seeds(seed):
     key = jax.random.key(1000 + seed)
     for shared in (True, False):
         for method in ("direct", "gram"):
-            s_proj = EstimatorSpec(
-                name="rand_proj_spatial", k=k, d_block=d, transform="avg",
+            s_proj = codec.build(
+                "rand_proj_spatial", k=k, d_block=d, transform="avg",
                 projection="subsample", decode_method=method,
                 shared_randomness=shared,
             )
-            s_spatial = EstimatorSpec(
-                name="rand_k_spatial", k=k, d_block=d, transform="avg",
+            s_spatial = codec.build(
+                "rand_k_spatial", k=k, d_block=d, transform="avg",
                 shared_randomness=shared,
             )
             a = mean_estimate(s_proj, key, xs)
@@ -166,11 +166,11 @@ def test_lemma_4_1_under_error_feedback():
     n, d, k = 4, 64, 4
     rng = np.random.default_rng(9)
     tree = {"w": jnp.asarray(rng.standard_normal((n, d)), jnp.float32)}
-    s_proj = EstimatorSpec(
-        name="rand_proj_spatial", k=k, d_block=d, transform="avg",
+    s_proj = codec.build(
+        "rand_proj_spatial", k=k, d_block=d, transform="avg",
         projection="subsample", decode_method="direct", ef=True,
     )
-    s_spatial = EstimatorSpec(name="rand_k_spatial", k=k, d_block=d,
+    s_spatial = codec.build("rand_k_spatial", k=k, d_block=d,
                               transform="avg", ef=True)
     ef_a = ef_b = jnp.zeros((n, 1, d))
     for t in range(4):
@@ -196,7 +196,7 @@ def test_gram_decode_equals_direct_decode():
     xs = make_clients("generic", n, d)
     key = jax.random.key(3)
     for transform in ("one", "max", "avg"):
-        sg = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=d,
+        sg = codec.build("rand_proj_spatial", k=k, d_block=d,
                            transform=transform, decode_method="gram")
         sd = sg.replace(decode_method="direct")
         a = mean_estimate(sg, key, xs)
@@ -208,7 +208,7 @@ def test_gram_decode_equals_direct_decode_per_chunk_and_est():
     n, d, k = 5, 64, 4
     xs = jnp.asarray(np.random.default_rng(5).standard_normal((n, 3, d)), jnp.float32)
     key = jax.random.key(4)
-    sg = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=d, r_mode="est",
+    sg = codec.build("rand_proj_spatial", k=k, d_block=d, r_mode="est",
                        shared_randomness=False, decode_method="gram")
     sd = sg.replace(decode_method="direct")
     a = mean_estimate(sg, key, xs)
@@ -232,7 +232,7 @@ def test_varying_correlation_ordering():
     assert r == pytest.approx(4.0)
     res = {}
     for name, tf in [("rand_k", "one"), ("rand_k_spatial", "opt"), ("rand_proj_spatial", "opt")]:
-        spec = EstimatorSpec(name=name, k=k, d_block=d, transform=tf, r_value=r)
+        spec = codec.build(name, k=k, d_block=d, transform=tf, r_value=r)
         _, res[name] = run_trials(spec, xs, trials=600, seed=2)
     paired = res["rand_k"] - res["rand_k_spatial"]
     sem = paired.std() / np.sqrt(len(paired))
@@ -250,7 +250,7 @@ def test_same_rotation_no_gain_appendix_a1():
     dsigns = np.sign(np.random.default_rng(0).standard_normal(d))
     g = h * dsigns[None, :]
     xs_rot = jnp.einsum("ncd,ed->nce", xs, jnp.asarray(g, jnp.float32))
-    spec = EstimatorSpec(name="rand_k", k=k, d_block=d)
+    spec = codec.build("rand_k", k=k, d_block=d)
     _, m_plain = run_trials(spec, xs, trials=800)
     _, m_rot = run_trials(spec, xs_rot, trials=800, seed=1)
     # rotation is an isometry; decoded-back MSE identical in distribution

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.core import EstimatorSpec, mean_estimate
+from repro.core import codec, mean_estimate
 from repro.core import beta as beta_lib
 from repro.data import SyntheticLM
 from repro.models import init_params
@@ -24,7 +24,7 @@ OPT = AdamW(lr=1e-2, warmup_steps=5)
 
 
 def _mk_supervisor(tmp, n_clients=2, spec=None):
-    spec = spec or EstimatorSpec(name="rand_proj_spatial", k=16, d_block=256)
+    spec = spec or codec.build("rand_proj_spatial", k=16, d_block=256)
 
     def make_step(n):
         return jax.jit(make_train_step(CFG, OPT, dme_spec=spec))
@@ -98,7 +98,7 @@ def test_straggler_drop_keeps_unbiasedness():
     n, d, k = 6, 128, 8
     rng = np.random.default_rng(0)
     xs = jnp.asarray(rng.standard_normal((n, 1, d)), jnp.float32)
-    spec = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=d, transform="avg")
+    spec = codec.build("rand_proj_spatial", k=k, d_block=d, transform="avg")
     # survivors: first 5 clients; mean target is the survivors' mean
     survivors = xs[:5]
     xbar = np.asarray(jnp.mean(survivors, axis=0))
@@ -128,7 +128,7 @@ def test_fl_straggler_renormalizes_by_actual_participants():
     n, d = 8, 128
     task = get_task("dme", n_clients=n, d=d, rho=0.6)
     cohort = Cohort(n_clients=n, participation=1.0, dropout=0.4)
-    spec = EstimatorSpec(name="identity", d_block=d)
+    spec = codec.build("identity", d_block=d)
     _, hist = run_rounds(task, spec, cohort, RoundConfig(n_rounds=8))
     xs = np.asarray(task.aux["xs"])  # (n, d) fixed client vectors
 
@@ -157,7 +157,7 @@ def test_fl_straggler_renormalizes_with_sparsifying_codec():
     n, d = 6, 64
     task = get_task("dme", n_clients=n, d=d, rho=0.5)
     cohort = Cohort(n_clients=n, dropout=0.35)
-    spec = EstimatorSpec(name="rand_k", k=d, d_block=d)
+    spec = codec.build("rand_k", k=d, d_block=d)
     _, hist = run_rounds(task, spec, cohort, RoundConfig(n_rounds=6))
     assert any(s < m for s, m in zip(hist.n_survivors, hist.n_sampled))
     assert max(hist.mse) < 1e-8

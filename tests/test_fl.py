@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import EstimatorSpec, transforms
+from repro.core import codec, transforms
 from repro.fl import Cohort, RoundConfig, get_task, run_rounds
 from repro.fl import server as server_lib
 
@@ -24,7 +24,7 @@ def test_round_driver_smoke_all_tasks():
     }
     for name, kw in small.items():
         task = get_task(name, n_clients=4, **kw)
-        spec = EstimatorSpec(name="rand_proj_spatial", k=8, d_block=64,
+        spec = codec.build("rand_proj_spatial", k=8, d_block=64,
                              transform="avg")
         state, hist = run_rounds(task, spec, Cohort(n_clients=4),
                                  RoundConfig(n_rounds=2))
@@ -38,7 +38,7 @@ def test_power_iteration_converges_and_estimators_order():
     task = get_task("power_iteration", n_clients=8, d=256, samples=1000)
     errs = {}
     for name in ("identity", "rand_proj_spatial"):
-        spec = EstimatorSpec(name=name, k=26, d_block=256, transform="avg")
+        spec = codec.build(name, k=26, d_block=256, transform="avg")
         state, _ = run_rounds(task, spec, Cohort(n_clients=8),
                               RoundConfig(n_rounds=10))
         errs[name] = task.metric(state)
@@ -54,7 +54,7 @@ def test_fig4_ordering_mse_at_equal_bytes_rho_09():
     res = {}
     for name, tf in [("rand_k", "one"), ("rand_k_spatial", "avg"),
                      ("rand_proj_spatial", "avg")]:
-        spec = EstimatorSpec(name=name, k=16, d_block=128, transform=tf)
+        spec = codec.build(name, k=16, d_block=128, transform=tf)
         _, hist = run_rounds(task, spec, Cohort(n_clients=8),
                              RoundConfig(n_rounds=50))
         res[name] = (np.mean(hist.mse), hist.total_bytes)
@@ -68,7 +68,7 @@ def test_temporal_beats_spatial_on_drift():
     """ISSUE acceptance: temporal decoding beats its spatial-only counterpart
     on a slowly-drifting task."""
     task = get_task("drift", n_clients=8, d=128, rho=0.95, omega=0.03)
-    spec = EstimatorSpec(name="rand_proj_spatial", k=16, d_block=128,
+    spec = codec.build("rand_proj_spatial", k=16, d_block=128,
                          transform="avg")
     _, h_sp = run_rounds(task, spec, Cohort(n_clients=8),
                          RoundConfig(n_rounds=20, temporal=False))
@@ -85,7 +85,7 @@ def test_wavg_tracks_correlation_online():
     approaches the true rho, and the resolved decode beats the blind avg."""
     rho_true = 0.9
     task = get_task("dme", n_clients=8, d=128, rho=rho_true)
-    spec = EstimatorSpec(name="rand_proj_spatial", k=24, d_block=128,
+    spec = codec.build("rand_proj_spatial", k=24, d_block=128,
                          transform="wavg")
     _, hist = run_rounds(task, spec, Cohort(n_clients=8),
                          RoundConfig(n_rounds=25))
@@ -101,13 +101,17 @@ def test_wavg_rejected_outside_fl_server():
     with pytest.raises(ValueError, match="wavg"):
         transforms.rho_for("wavg", 8)
     # resolution: wavg -> avg cold, -> opt(R_ema * (n-1)) warm, -> one if n=1
-    spec = EstimatorSpec(name="rand_proj_spatial", transform="wavg")
+    pipe = codec.build("rand_proj_spatial", transform="wavg")
     st = server_lib.ServerState()
-    assert server_lib.resolve_spec(spec, st, 8).transform == "avg"
+    assert server_lib.resolve_pipeline(pipe, st, 8).transform == "avg"
     st.r_ema = 0.8
-    r = server_lib.resolve_spec(spec, st, 8)
-    assert r.transform == "opt" and r.r_value == pytest.approx(0.8 * 7)
-    assert server_lib.resolve_spec(spec, st, 1).transform == "one"
+    r = server_lib.resolve_pipeline(pipe, st, 8)
+    assert r.transform == "opt"
+    assert r.sparsifier.r_value == pytest.approx(0.8 * 7)
+    assert server_lib.resolve_pipeline(pipe, st, 1).transform == "one"
+    # transform-free sparsifiers pass through the singleton rewrite untouched
+    rk = server_lib.resolve_pipeline(codec.build("rand_k"), st, 1)
+    assert rk.transform is None and rk.name == "rand_k"
 
 
 def test_partial_participation_and_heterogeneous_budgets():
@@ -119,13 +123,13 @@ def test_partial_participation_and_heterogeneous_budgets():
     task = get_task("dme", n_clients=n, d=d, rho=0.5)
     cohort = Cohort(n_clients=n, participation=0.75, dropout=0.25,
                     budgets=budgets)
-    spec = EstimatorSpec(name="identity", d_block=d)
+    spec = codec.build("identity", d_block=d)
     _, hist = run_rounds(task, spec, cohort, RoundConfig(n_rounds=6))
     assert max(hist.mse) < 1e-9  # exact survivor mean every round
     # some round actually saw attrition
     assert any(s < m for s, m in zip(hist.n_survivors, hist.n_sampled))
     # rand_k ledger: bytes = sum over survivors of C * k_i * 4
-    spec_rk = EstimatorSpec(name="rand_k", k=16, d_block=d)
+    spec_rk = codec.build("rand_k", k=16, d_block=d)
     _, h_rk = run_rounds(task, spec_rk, cohort, RoundConfig(n_rounds=6))
     for t in range(6):
         part = cohort.sample_round(0, t)
@@ -138,7 +142,7 @@ def test_heterogeneous_budget_decode_is_unbiased():
     n, d = 6, 64
     task = get_task("dme", n_clients=n, d=d, rho=0.7)
     cohort = Cohort(n_clients=n, budgets=(8, 8, 8, 16, 16, 16))
-    spec = EstimatorSpec(name="rand_k", k=8, d_block=d)
+    spec = codec.build("rand_k", k=8, d_block=d)
     ests = []
     for seed in range(150):
         _, hist = run_rounds(task, spec, cohort,
@@ -152,7 +156,7 @@ def test_heterogeneous_budget_decode_is_unbiased():
 
 def test_backend_parity_local_gspmd_shardmap():
     task = get_task("dme", n_clients=8, d=128, rho=0.8)
-    spec = EstimatorSpec(name="rand_proj_spatial", k=16, d_block=128,
+    spec = codec.build("rand_proj_spatial", k=16, d_block=128,
                          transform="avg", use_pallas="never")
     cohort = Cohort(n_clients=8, participation=0.75, dropout=0.2)
     _, h_local = run_rounds(task, spec, cohort, RoundConfig(n_rounds=4))

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import EstimatorSpec
+from repro.core import codec
 from repro.dist import collectives
 
 N, D_FLAT, D_BLOCK = 4, 2048, 512  # no tail padding: 4 exact chunks
@@ -20,7 +20,7 @@ def _tree(seed=0):
 @pytest.mark.parametrize("name", ["rand_k", "rand_proj_spatial"])
 @pytest.mark.parametrize("k", [32, 64, 128])
 def test_bytes_sent_scales_as_k_over_d_block(name, k):
-    spec = EstimatorSpec(name=name, k=k, d_block=D_BLOCK)
+    spec = codec.build(name, k=k, d_block=D_BLOCK)
     _, info, _ = collectives.compressed_mean_tree(spec, jax.random.key(0), _tree())
     assert info["n_clients"] == N
     assert info["n_chunks"] == D_FLAT // D_BLOCK
@@ -32,14 +32,14 @@ def test_bytes_sent_scales_as_k_over_d_block(name, k):
 
 
 def test_identity_payload_is_full_size():
-    spec = EstimatorSpec(name="identity", d_block=D_BLOCK)
+    spec = codec.build("identity", d_block=D_BLOCK)
     _, info, _ = collectives.compressed_mean_tree(spec, jax.random.key(0), _tree())
     assert info["payload_bytes_per_client"] == info["full_bytes"] == D_FLAT * 4
 
 
 def test_top_k_payload_counts_transmitted_indices():
     k = 32
-    spec = EstimatorSpec(name="top_k", k=k, d_block=D_BLOCK)
+    spec = codec.build("top_k", k=k, d_block=D_BLOCK)
     _, info, _ = collectives.compressed_mean_tree(spec, jax.random.key(0), _tree())
     # data-dependent indices DO travel: k f32 values + k int32 indices
     assert info["payload_bytes_per_client"] == info["n_chunks"] * k * (4 + 4)
@@ -50,7 +50,7 @@ def test_payload_dtype_quantization_savings(name):
     k = 128
     trees = {}
     for dtype in ("float32", "bfloat16", "int8"):
-        spec = EstimatorSpec(name=name, k=k, d_block=D_BLOCK, payload_dtype=dtype)
+        spec = codec.build(name, k=k, d_block=D_BLOCK, payload_dtype=dtype)
         _, info, _ = collectives.compressed_mean_tree(spec, jax.random.key(0), _tree())
         trees[dtype] = info["payload_bytes_per_client"]
     c = D_FLAT // D_BLOCK

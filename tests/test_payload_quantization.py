@@ -9,7 +9,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import EstimatorSpec, correlation, mean_estimate
+from repro.core import codec, correlation, mean_estimate
 from repro.core.estimators import base as est_base
 
 
@@ -24,7 +24,7 @@ def _xs(n, d, seed=0):
 def test_quantized_payload_unbiased(dtype):
     n, d, k = 6, 128, 16
     xs = _xs(n, d)
-    spec = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=d,
+    spec = codec.build("rand_proj_spatial", k=k, d_block=d,
                          transform="avg", payload_dtype=dtype)
     xbar = np.asarray(jnp.mean(xs, axis=0))
 
@@ -43,7 +43,7 @@ def test_int8_payload_bytes_and_mse_tradeoff():
     key = jax.random.key(1)
     sizes, mses = {}, {}
     for dtype in ("float32", "int8"):
-        spec = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=d,
+        spec = codec.build("rand_proj_spatial", k=k, d_block=d,
                              transform="avg", payload_dtype=dtype)
         payload = est_base.encode(spec, key, 0, xs[0])
         sizes[dtype] = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(payload))
@@ -62,7 +62,7 @@ def test_int8_payload_bytes_and_mse_tradeoff():
 def test_property_decode_finite_any_seed(seed, k):
     """Property: decode is finite for any round key / budget (no NaN paths)."""
     xs = _xs(4, 64, seed=seed % 1000)
-    spec = EstimatorSpec(name="rand_proj_spatial", k=k, d_block=64,
+    spec = codec.build("rand_proj_spatial", k=k, d_block=64,
                          transform="avg", payload_dtype="int8")
     xh = mean_estimate(spec, jax.random.key(seed), xs)
     assert bool(jnp.isfinite(xh).all())
