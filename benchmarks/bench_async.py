@@ -1,0 +1,171 @@
+"""Async-round benchmark: round-time and bytes-to-target vs straggler rate,
+sync vs async (staleness-1 admission), plus the overlapped-collectives
+micro-benchmark.
+
+Because CI wall-clock is too noisy to carry the scheduling claim, round time
+comes from an explicit latency model (constants below, normalised units):
+
+    sync  round = (T_TIMEOUT if any straggler else T_COMPUTE) + T_DECODE
+                  — the server waits for stragglers until the timeout, then
+                  drops them, then decodes
+    async round = max(T_COMPUTE, T_DECODE)
+                  — the server decodes whoever reported at the deadline while
+                  clients already encode the next round (steady state; round
+                  0 pays one extra T_DECODE to fill the pipe)
+
+The MSE trajectories are NOT modelled: both modes run the real round driver
+(``fl.rounds.run_rounds``) on the same cohort draws, so the quality side of
+wall-clock-per-target-MSE is measured, and the ledger identity
+``async_total_bytes == sync_total_bytes + admitted_stale_bytes`` is asserted
+(the byte cost of admission is exactly the admitted payloads).
+
+Rows:
+    async/<task>@<rate>/<mode>   us_per_round   time_to_target=<model units>;
+        bytes_to_target=<...>;mean_mse_pop=<...>;stale=<n>
+    async/overlap/<pipeline>     us_per_call    parity=bit-exact;tiles=<C>
+
+The run asserts the tentpole acceptance: at straggler rate >= 0.2 the async
+driver strictly reduces modelled wall-clock-to-target-MSE vs sync.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import codec
+from repro.fl import Cohort, RoundConfig, get_task, run_rounds
+
+from .common import rows
+
+T_COMPUTE = 1.0   # client vector compute + encode
+T_DECODE = 0.5    # server decode
+T_TIMEOUT = 3.0   # how long the sync server waits before dropping stragglers
+
+
+def round_times(hist, mode: str) -> np.ndarray:
+    """Per-round wall-clock under the latency model, from the real
+    participation outcomes recorded in ``hist``."""
+    straggled = np.asarray(hist.n_sampled) > np.asarray(hist.n_survivors)
+    if mode == "sync":
+        return np.where(straggled, T_TIMEOUT, T_COMPUTE) + T_DECODE
+    t = np.full(len(hist.mse), max(T_COMPUTE, T_DECODE))
+    t[0] += T_DECODE  # pipeline fill
+    return t
+
+
+def to_target(hist, times: np.ndarray, target: float):
+    """(modelled time, ledger bytes) at the round where the RUNNING MEAN of
+    mse_pop first reaches <= target — one trajectory for both columns, so a
+    row can never report a finite time next to bytes=never."""
+    run_mean = np.cumsum(hist.mse_pop) / np.arange(1, len(hist.mse_pop) + 1)
+    hit = np.flatnonzero(run_mean <= target)
+    if not len(hit):
+        return None, None
+    r = hit[0]
+    return float(np.cumsum(times)[r]), int(np.cumsum(hist.bytes)[r])
+
+
+def compare(out, rate: float, n_rounds: int, d: int, seed: int = 0):
+    """One straggler rate: sync vs async on the drift task, same cohort
+    draws. Returns (sync_time_to_target, async_time_to_target)."""
+    task = get_task("drift", n_clients=8, d=d, rho=0.95, omega=0.02, seed=seed)
+    pipe = codec.RandProjSpatial(k=max(1, d // 10), d_block=d, transform="avg")
+    cohort = Cohort(n_clients=8, dropout=rate)
+
+    hists, walls = {}, {}
+    for mode in ("sync", "async"):
+        cfg = RoundConfig(n_rounds=n_rounds, seed=seed,
+                          async_rounds=(mode == "async"))
+        t0 = time.time()
+        _, hist = run_rounds(task, pipe, cohort, cfg)
+        us_round = (time.time() - t0) / n_rounds * 1e6
+        hists[mode], walls[mode] = hist, us_round
+
+    # ledger identity: async extra cost is exactly the late-arrival bytes
+    h_s, h_a = hists["sync"], hists["async"]
+    if h_a.total_bytes != h_s.total_bytes + h_a.total_stale_bytes:
+        raise AssertionError(
+            f"async ledger mismatch at rate {rate}: "
+            f"{h_a.total_bytes} != {h_s.total_bytes} + {h_a.total_stale_bytes}"
+        )
+
+    # target both runs reach: 5% above the sync steady-state running mean
+    run_mean_sync = np.cumsum(h_s.mse_pop) / np.arange(1, n_rounds + 1)
+    target = 1.05 * float(run_mean_sync[-1])
+
+    out_times = {}
+    for mode in ("sync", "async"):
+        hist = hists[mode]
+        times = round_times(hist, mode)
+        ttt, btt = to_target(hist, times, target)
+        out_times[mode] = ttt
+        rows(out, f"async/drift@{rate:.1f}/{mode}", walls[mode],
+             f"time_to_target={'never' if ttt is None else f'{ttt:.1f}'};"
+             f"bytes_to_target={'never' if btt is None else btt};"
+             f"mean_mse_pop={np.mean(hist.mse_pop):.6f};"
+             f"stale={sum(hist.n_stale)};total_time={np.sum(times):.1f}")
+    return out_times["sync"], out_times["async"]
+
+
+def assert_async_wins(rate: float, t_sync, t_async) -> None:
+    """Tentpole acceptance: at straggler rate >= 0.2 async strictly reduces
+    modelled wall-clock-to-target-MSE."""
+    if rate < 0.2:
+        return
+    if t_sync is None:
+        return  # sync never reached its own steady state: nothing to compare
+    if t_async is None or not t_async < t_sync:
+        raise AssertionError(
+            f"async did not strictly beat sync at straggler rate {rate}: "
+            f"sync={t_sync} async={t_async}"
+        )
+
+
+def overlap_microbench(out, n=8, d=256, n_chunks=8):
+    """Overlapped vs synchronous collectives: same bytes, same bits; CPU
+    timing recorded for the trajectory only (the overlap pays off on async
+    backends where dispatch order buys concurrency)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist import collectives
+
+    rng = np.random.default_rng(0)
+    tree = {"w": jnp.asarray(
+        rng.standard_normal((n, n_chunks, d)).astype(np.float32))}
+    pipe = codec.as_pipeline(codec.RandProjSpatial(k=d // 8, d_block=d))
+    key = jax.random.key(0)
+    results = {}
+    for overlap in (False, True):
+        m, info, _ = collectives.compressed_mean_tree(  # untimed warmup
+            pipe, key, tree, overlap=overlap)
+        jax.block_until_ready(m)
+        t0 = time.time()
+        m, info, _ = collectives.compressed_mean_tree(
+            pipe, key, tree, overlap=overlap)
+        jax.block_until_ready(m)
+        us = (time.time() - t0) * 1e6
+        results[overlap] = (m, info)
+        rows(out, f"async/overlap/rand_proj_spatial.{'stream' if overlap else 'sync'}",
+             us, f"parity=bit-exact;tiles={n_chunks};"
+                 f"bytes_per_client={info['payload_bytes_per_client']}")
+    np.testing.assert_array_equal(np.asarray(results[False][0]["w"]),
+                                  np.asarray(results[True][0]["w"]))
+    assert results[False][1] == results[True][1]
+
+
+def run(out, n_rounds=30, d=256):
+    for rate in (0.0, 0.2, 0.4):
+        t_sync, t_async = compare(out, rate, n_rounds, d)
+        assert_async_wins(rate, t_sync, t_async)
+    overlap_microbench(out)
+
+
+def smoke(out):
+    """Reduced CI sweep: one clean rate + one straggler rate, with the
+    strict async-wins acceptance assert kept live."""
+    for rate in (0.0, 0.3):
+        t_sync, t_async = compare(out, rate, n_rounds=12, d=128)
+        assert_async_wins(rate, t_sync, t_async)
+    overlap_microbench(out, n=4, d=128, n_chunks=4)

@@ -47,6 +47,10 @@ def smoke(out: list[str]) -> None:
 
     bench_fl.smoke(out)
 
+    from . import bench_async
+
+    bench_async.smoke(out)
+
     # dist-layer round-trip: pytree -> chunked encode -> server decode -> tree
     rng = np.random.default_rng(0)
     tree = {
@@ -80,7 +84,7 @@ def write_json(out: list[str], mode: str, secs: float) -> str:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="mse,tasks,fl,systems,roofline")
+    ap.add_argument("--only", default="mse,tasks,fl,async,systems,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced-size CI sweep; writes results/BENCH_smoke.json")
     args = ap.parse_args()
@@ -103,6 +107,10 @@ def main() -> None:
             from . import bench_fl
 
             bench_fl.run(out)
+        if "async" in sections:
+            from . import bench_async
+
+            bench_async.run(out)
         if "systems" in sections:
             from . import bench_systems
 

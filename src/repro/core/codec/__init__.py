@@ -29,6 +29,7 @@ from .payload import (  # noqa: F401
     Payload,
     PayloadMeta,
     check_against_schema,
+    with_staleness,
 )
 from .pipeline import Pipeline  # noqa: F401
 from .quantizers import QUANTIZERS, Bf16Quant, Int8Quant  # noqa: F401

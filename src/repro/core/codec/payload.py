@@ -67,6 +67,7 @@ class PayloadMeta:
     d_block: int                     # chunk size the budget applies to
     stages: tuple = ()               # stage names, encode order
     schema: tuple = ()               # tuple[ArraySpec, ...]: declared wire format
+    staleness: int = 0               # rounds between encode and decode (0 = fresh)
 
     @property
     def declared_nbytes(self) -> int:
@@ -138,6 +139,26 @@ def arrays_of(payload) -> dict:
 
 def meta_of(payload) -> PayloadMeta | None:
     return payload.meta if isinstance(payload, Payload) else None
+
+
+def with_staleness(payload: Payload, staleness: int) -> Payload:
+    """Return ``payload`` re-tagged with ``meta.staleness = staleness``.
+
+    Staleness is the number of rounds between a payload's encode and its
+    decode: 0 is a fresh (synchronous) payload, 1 is a payload that missed
+    its round's deadline and is admitted into the NEXT round's decode
+    (buffered staleness-1 aggregation, ``fl.rounds`` async mode). The tag is
+    pure metadata — arrays, wire bytes, and the declared schema are
+    untouched, so a stale payload passes the same ledger-honesty check and
+    decodes to the same numbers as its fresh twin (it is the *round key* of
+    the decode that differs, not the payload).
+    """
+    if staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
+    if not isinstance(payload, Payload):
+        raise TypeError(f"expected Payload, got {type(payload).__name__}")
+    meta = dataclasses.replace(payload.meta, staleness=staleness)
+    return Payload(arrays=payload.arrays, meta=meta)
 
 
 def check_against_schema(payload: Payload) -> list[str]:

@@ -83,6 +83,30 @@ class Pipeline:
     def stateful(self) -> bool:
         return self.has_ef or self.has_client_temporal
 
+    @property
+    def chunk_streamable(self) -> bool:
+        """True when encode/decode of a chunk *slice* is bit-identical to the
+        same rows of a whole-vector encode/decode — the precondition for the
+        overlapped (double-buffered) collectives (``dist.collectives``,
+        ``overlap=True``).
+
+        Holds when per-chunk randomness does not depend on the chunk's
+        position in the array: data-dependent sparsifiers (top_k) and the
+        identity are position-free; the rand_k / SRHT family is position-free
+        iff ``shared_randomness=True`` (one draw serves every chunk). It
+        breaks for ``shared_randomness=False`` and for wangni / induced
+        (per-chunk ``fold_in(ckey, chunk_position)`` keys) and for
+        ``Int8Quant`` (stochastic-rounding noise is drawn over the full array
+        shape, so a slice draws different noise).
+        """
+        sp = self.sparsifier
+        if sp.name not in ("top_k", "identity") and not getattr(
+            sp, "shared_randomness", False
+        ):
+            return False
+        q = self.quantizer
+        return q is None or q.name != "int8"
+
     # convenience forwards (the attributes drivers/benchmarks report on)
     @property
     def name(self) -> str:

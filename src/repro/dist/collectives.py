@@ -33,6 +33,18 @@ Only participants encode/transmit; the decode re-derives THEIR randomness via
 ``client_ids`` and normalises by the actual participant count — never by the
 sampled count (straggler renormalisation). Non-participants' EF residuals
 carry over unchanged.
+
+Overlapped collectives (``overlap=True``): both entry points can stream the
+chunk axis through a double buffer — the encode of chunk tile c+1 is
+enqueued (and, on an async backend, runs) while tile c's payload is in
+flight / decoding, instead of encoding all C chunks, then decoding all C
+chunks. On the shard_map path the per-tile ``all_gather`` IS the in-flight
+payload, so encode genuinely overlaps cross-client traffic. The streamed
+path is bit-identical to the synchronous one (asserted by
+tests/test_async.py on all three fl backends); it therefore requires a
+``chunk_streamable`` pipeline — per-chunk randomness independent of chunk
+position (see ``codec.Pipeline.chunk_streamable``) — and raises otherwise
+rather than silently changing the estimate.
 """
 from __future__ import annotations
 
@@ -118,8 +130,93 @@ def _participant_ids(participants, n_total: int) -> np.ndarray:
     return p.astype(np.int32)
 
 
+def check_streamable(pipe) -> None:
+    if not pipe.chunk_streamable:
+        raise ValueError(
+            "overlap=True needs a chunk-streamable pipeline (per-chunk "
+            "randomness independent of chunk position): the rand_k / SRHT "
+            "family with shared_randomness=True, top_k, or identity, and no "
+            f"Int8Quant stage. Got {pipe.describe()!r} — run it with "
+            "overlap=False instead."
+        )
+
+
+def stream_tiles(n_chunks: int, tile: int = 1) -> list:
+    """Chunk-axis tiling for the double-buffered stream: [(lo, hi), ...]."""
+    if tile < 1:
+        raise ValueError(f"overlap_tile must be >= 1, got {tile}")
+    return [(lo, min(lo + tile, n_chunks)) for lo in range(0, n_chunks, tile)]
+
+
+def _double_buffer(tiles, produce, consume) -> list:
+    """The overlap idiom, in one place: ``produce(tile c+1)`` is enqueued
+    BEFORE ``consume`` of tile c — so on an async backend the next tile's
+    encode runs while the previous tile's payload is in flight / decoding.
+    Returns ``[consume(tile, produce(tile)) for tile in tiles]`` evaluated
+    in that staggered order."""
+    outs: list = []
+    in_flight = None
+    for t in tiles:
+        entry = produce(t)
+        if in_flight is not None:
+            outs.append(consume(*in_flight))
+        in_flight = (t, entry)
+    outs.append(consume(*in_flight))
+    return outs
+
+
+def streamed_mean(pipe, key, x, n, *, client_ids=None, side_info=None,
+                  tile: int = 1, need_self: bool = False, constrain=None):
+    """Double-buffered chunk streaming: encode tile c+1 while tile c decodes.
+
+    ``x``: (n, C, d_block) chunk array (EF residual already added by the
+    caller); ``side_info``: (C, d_block) broadcast side information — the
+    tile's slice is subtracted before encode and added back after decode,
+    exactly as ``Pipeline.encode``/``decode`` would. ``constrain`` optionally
+    applies a sharding constraint to each tile's payload leaves.
+
+    Returns (mean (C, d_block), self_dec (n, C, d_block) | None). For
+    chunk-streamable pipelines (validated here) the result is BIT-identical
+    to the synchronous encode_all -> decode_payload: tiles only reorder
+    work, never the numbers. The ordering is what buys the overlap — each
+    tile's encode is enqueued before the previous tile's decode, so an async
+    backend runs them concurrently while the payload is notionally on the
+    wire.
+    """
+    check_streamable(pipe)
+    n_chunks = x.shape[1]
+    ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
+
+    def produce(t):
+        lo, hi = t
+        x_tile = x[:, lo:hi]
+        if side_info is not None:
+            x_tile = x_tile - side_info[None, lo:hi]
+        payloads, _ = pipe.encode_all(key, x_tile, client_ids=ids)
+        return payloads if constrain is None else constrain(payloads)
+
+    def consume(t, payloads):
+        lo, hi = t
+        dec = pipe.decode_payload(key, payloads, n, client_ids=ids)
+        if side_info is not None:
+            dec = dec + side_info[lo:hi]
+        self_dec = None
+        if need_self:
+            self_dec = jax.vmap(
+                lambda i, p: pipe.self_decode(key, i, p)
+            )(ids, payloads)
+        return dec, self_dec
+
+    drained = _double_buffer(stream_tiles(n_chunks, tile), produce, consume)
+    mean = jnp.concatenate([d for d, _ in drained], axis=0)
+    self_dec = (
+        jnp.concatenate([s for _, s in drained], axis=1) if need_self else None
+    )
+    return mean, self_dec
+
+
 def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
-                         participants=None):
+                         participants=None, overlap=False, overlap_tile=1):
     """Cross-client compressed mean of a pytree.
 
     tree leaves: (n_clients, ...). Returns (mean_tree, info, ef_next) where
@@ -148,18 +245,27 @@ def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
             ef_chunks = jnp.zeros_like(chunks)
         x = part_chunks + (ef_chunks if ids is None else ef_chunks[ids])
 
-    payloads, _ = pipe.encode_all(key, x, client_ids=ids)
-    if shardings is not None:
-        payloads = shardings.constrain_tree(payloads)
-    mean_chunks = pipe.decode_payload(key, payloads, n, client_ids=ids)
+    if overlap:
+        mean_chunks, self_dec = streamed_mean(
+            pipe, key, x, n, client_ids=ids, tile=overlap_tile,
+            need_self=pipe.has_ef,
+            constrain=None if shardings is None else shardings.constrain_tree,
+        )
+    else:
+        payloads, _ = pipe.encode_all(key, x, client_ids=ids)
+        if shardings is not None:
+            payloads = shardings.constrain_tree(payloads)
+        mean_chunks = pipe.decode_payload(key, payloads, n, client_ids=ids)
+        self_dec = None
+        if pipe.has_ef:
+            id_arr = jnp.arange(n) if ids is None else jnp.asarray(ids)
+            self_dec = jax.vmap(
+                lambda i, p: pipe.self_decode(key, i, p)
+            )(id_arr, payloads)
     mean_tree = restore(mean_chunks)
 
     ef_next = None
     if pipe.has_ef:
-        id_arr = jnp.arange(n) if ids is None else jnp.asarray(ids)
-        self_dec = jax.vmap(
-            lambda i, p: pipe.self_decode(key, i, p)
-        )(id_arr, payloads)
         resid = x - self_dec
         ef_next = resid if ids is None else ef_chunks.at[jnp.asarray(ids)].set(resid)
 
@@ -172,7 +278,8 @@ def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
 
 def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
                                   client_axes=("pod",), ef_chunks=None,
-                                  participants=None):
+                                  participants=None, overlap=False,
+                                  overlap_tile=1):
     """Explicit-collective compressed mean via shard_map.
 
     grads leaves: (n_clients, ...) with the client axis sharded over
@@ -206,7 +313,10 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
         return compressed_mean_tree(
             pipe, key, grads, dme_shardings(mesh, client_axes),
             ef_chunks=ef_chunks, participants=participants,
+            overlap=overlap, overlap_tile=overlap_tile,
         )
+    if overlap:
+        check_streamable(pipe)
     n_local = n // n_shards
 
     part_ids = None if participants is None else _participant_ids(participants, n)
@@ -235,27 +345,51 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
             lambda i: chunking.tree_chunk(_client_slice(g_local, i), pipe.d_block)[0]
         )(jnp.arange(n_local))
         x = chunks + ef_local if use_ef else chunks
-        payloads = jax.vmap(
-            lambda i, c: pipe.encode_payload(key, i, c)
-        )(ids, x)
-        gathered = jax.tree.map(
-            lambda leaf: jax.lax.all_gather(leaf, client_axes, axis=0, tiled=True),
-            payloads,
-        )
-        if part_ids is None:
-            mean_chunks = pipe.decode_payload(key, gathered, n)
-        else:
-            selected = jax.tree.map(lambda leaf: leaf[part_ids], gathered)
-            mean_chunks = pipe.decode_payload(
-                key, selected, n_eff, client_ids=part_ids
+
+        def encode_and_gather(x_tile):
+            payloads = jax.vmap(
+                lambda i, c: pipe.encode_payload(key, i, c)
+            )(ids, x_tile)
+            gathered = jax.tree.map(
+                lambda leaf: jax.lax.all_gather(
+                    leaf, client_axes, axis=0, tiled=True
+                ),
+                payloads,
             )
-        if not use_ef:
-            return restore(mean_chunks), ef_local
+            return payloads, gathered
+
+        def decode_gathered(gathered):
+            if part_ids is None:
+                return pipe.decode_payload(key, gathered, n)
+            selected = jax.tree.map(lambda leaf: leaf[part_ids], gathered)
+            return pipe.decode_payload(key, selected, n_eff, client_ids=part_ids)
+
+        def local_self_dec(payloads):
+            return jax.vmap(
+                lambda i, p: pipe.self_decode(key, i, p)
+            )(ids, payloads)
+
+        if not overlap:
+            payloads, gathered = encode_and_gather(x)
+            mean_chunks = decode_gathered(gathered)
+            if not use_ef:
+                return restore(mean_chunks), ef_local
+            self_dec = local_self_dec(payloads)
+        else:
+            # the per-tile all_gather IS the in-flight payload here
+            drained = _double_buffer(
+                stream_tiles(n_chunks, overlap_tile),
+                lambda t: encode_and_gather(x[:, t[0]:t[1]]),
+                lambda t, e: (decode_gathered(e[1]),
+                              local_self_dec(e[0]) if use_ef else None),
+            )
+            mean_chunks = jnp.concatenate([m for m, _ in drained], axis=0)
+            if not use_ef:
+                return restore(mean_chunks), ef_local
+            self_dec = jnp.concatenate([s for _, s in drained], axis=1)
+
         # residual update stays on the client's shard; non-participants keep
         # their residual (they did not transmit this round)
-        self_dec = jax.vmap(
-            lambda i, p: pipe.self_decode(key, i, p)
-        )(ids, payloads)
         resid = x - self_dec
         local_part = jnp.take(jnp.asarray(part_mask), ids)
         ef_next = jnp.where(local_part[:, None, None], resid, ef_local)

@@ -43,6 +43,17 @@ class Participation:
     def n_survivors(self) -> int:
         return len(self.survivors)
 
+    @property
+    def stragglers(self) -> np.ndarray:
+        """Sampled clients that missed the round's reporting deadline.
+
+        The sync driver drops them (their randomness never enters the
+        decode); the async driver (``RoundConfig(async_rounds=True)``) treats
+        them as LATE — they still encode this round's vectors, and their
+        payloads are admitted into the next round's decode at staleness 1.
+        """
+        return np.setdiff1d(self.sampled, self.survivors)
+
 
 @dataclasses.dataclass(frozen=True)
 class Cohort:

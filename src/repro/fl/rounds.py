@@ -27,6 +27,23 @@ backend for per-client temporal memories, which need the driver to mirror
 each client's state); "gspmd" and "shard_map" route steps 3-5 through
 repro.dist.collectives on a mesh — the same math, with payload-sized
 cross-device traffic on the shard_map path.
+
+Async rounds (``RoundConfig(async_rounds=True)``, docs/DESIGN.md §9): the
+server decodes whoever reported by the deadline and moves on — stragglers
+are not waited for. Their encodes (of THIS round's vectors, overlapping the
+server's decode) complete late; the payloads are buffered and admitted into
+the NEXT round's decode at staleness 1 instead of being dropped: the stale
+group is decoded with its own round key and side information (temporal
+machinery is exactly what makes a stale payload usable), tagged
+``payload.meta.staleness = 1``, ledgered at arrival, and combined with the
+fresh survivors' mean re-weighted by client count (``cfg.stale_weight`` per
+stale client). With ``dropout=0`` the async driver is bit-identical to the
+sync one — the buffer never fills.
+
+Overlapped decode (``RoundConfig(overlap=True)``): steps 3-5 stream the
+chunk axis through ``dist.collectives``'s double buffer (encode of chunk
+c+1 while chunk c's payload is in flight), bit-identical to the synchronous
+path on every backend; requires a stateless, chunk-streamable pipeline.
 """
 from __future__ import annotations
 
@@ -38,7 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import chunking, correlation
-from ..core.codec import ClientState, as_pipeline
+from ..core.codec import ClientState, as_pipeline, with_staleness
 from ..dist import collectives
 from . import server as server_lib
 from .clients import Cohort
@@ -55,6 +72,29 @@ class RoundConfig:
     backend: str = "local"      # local | gspmd | shard_map
     mesh: Any = None            # required for gspmd / shard_map
     client_axes: tuple = ("pod",)
+    async_rounds: bool = False  # staleness-1 buffered aggregation (§9)
+    staleness: int = 1          # max admitted payload age; 0 = drop late payloads
+    stale_weight: float = 1.0   # per-client weight of an admitted stale payload
+    overlap: bool = False       # double-buffered chunk streaming in the decode
+    overlap_tile: int = 1       # chunks per stream tile
+
+
+@dataclasses.dataclass
+class _StaleBuffer:
+    """Round t's straggler encodes, waiting for admission at round t+1.
+
+    The simulation stores the encode INPUTS (round key, chunk rows, side
+    information / temporal-memory snapshot) rather than the arrays that
+    crossed the wire: encode is deterministic in them, so the admitted
+    payload is re-derived bit-exactly at decode time — the same trick the
+    decode itself uses to re-derive survivor randomness from client ids.
+    """
+
+    key: Any            # the round key the stragglers encoded with
+    ids: np.ndarray     # straggler client ids
+    xs_rows: Any        # (m, C, d_block) their round-t chunk rows
+    side: Any           # broadcast side info they encoded against (or None)
+    mem_rows: Any       # per-client temporal memory snapshot rows (or None)
 
 
 @dataclasses.dataclass
@@ -63,15 +103,24 @@ class History:
 
     metric: list = dataclasses.field(default_factory=list)
     mse: list = dataclasses.field(default_factory=list)      # vs survivors' true mean
+    mse_pop: list = dataclasses.field(default_factory=list)  # vs ALL clients' mean
     bytes: list = dataclasses.field(default_factory=list)    # transmitted this round
     n_survivors: list = dataclasses.field(default_factory=list)
     n_sampled: list = dataclasses.field(default_factory=list)
+    n_stale: list = dataclasses.field(default_factory=list)  # late payloads admitted
+    # late-ARRIVAL bytes (subset of ``bytes``): every late payload that lands
+    # is ledgered, admitted into the decode or superseded by a fresh report
+    stale_bytes: list = dataclasses.field(default_factory=list)
     rho_hat: list = dataclasses.field(default_factory=list)  # tracker output (or nan)
     client_state: Any = None  # final stacked ClientState (None if stateless)
 
     @property
     def total_bytes(self) -> int:
         return int(np.sum(self.bytes))
+
+    @property
+    def total_stale_bytes(self) -> int:
+        return int(np.sum(self.stale_bytes)) if self.stale_bytes else 0
 
     def bytes_to_target(self, target: float, key: str = "metric") -> int | None:
         """Cumulative bytes when the metric first reaches <= target."""
@@ -92,10 +141,20 @@ def _scatter_rows(full, rows, ids_j):
     return jax.tree.map(lambda f, r: f.at[ids_j].set(r), full, rows)
 
 
-def _group_local(pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate):
+def _group_local(pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate,
+                 overlap=False, overlap_tile=1):
     """One budget group on the local backend. Returns (group mean, updated
-    full ClientState, stacked payloads for the tracker)."""
+    full ClientState, stacked payloads for the tracker — None on the
+    overlapped path, which never materialises the whole payload stack)."""
     ids_j = jnp.asarray(ids_g)
+    if overlap:
+        # stateless by construction (run_rounds validates): stream the chunk
+        # axis through the dist layer's double buffer — bit-identical
+        dec, _ = collectives.streamed_mean(
+            pipe_g, key, xs_chunks[ids_g], len(ids_g), client_ids=ids_j,
+            side_info=side, tile=overlap_tile,
+        )
+        return dec, cstate, None
     st_g = None
     if cstate is not None:
         st_g = jax.tree.map(lambda a: a[ids_j], cstate)
@@ -126,11 +185,13 @@ def _group_dist(pipe_g, key, xs_chunks, ids_g, side, cstate, cfg):
         mean_tree, info, ef_next = collectives.compressed_mean_tree_shardmap(
             pipe_g, key, tree, cfg.mesh, client_axes=cfg.client_axes,
             participants=ids_g, ef_chunks=ef_arr,
+            overlap=cfg.overlap, overlap_tile=cfg.overlap_tile,
         )
     else:
         shardings = collectives.dme_shardings(cfg.mesh, cfg.client_axes)
         mean_tree, info, ef_next = collectives.compressed_mean_tree(
             pipe_g, key, tree, shardings, participants=ids_g, ef_chunks=ef_arr,
+            overlap=cfg.overlap, overlap_tile=cfg.overlap_tile,
         )
     if ef_next is not None:
         cstate = ClientState(ef=ef_next, memory=cstate.memory)
@@ -154,7 +215,20 @@ def _measure_rho_dist(pipe_g, key, delta, ids_g, cstate):
     return server_lib.measure_rho(pipe_g, key, payloads, ids_g)
 
 
-def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate):
+def _side_and_memory(pipe, cfg, state_srv, cstate):
+    """Round-start snapshot of the side information the clients encode
+    against: (broadcast side info | None, per-client memory snapshot | None).
+    Taken BEFORE any state row updates so straggler encodes (async mode) see
+    exactly what an on-time encode would have."""
+    if pipe.has_client_temporal:
+        return None, cstate.memory
+    if cfg.temporal or (pipe.temporal_stage is not None):
+        return server_lib.side_info_for(state_srv, temporal=True), None
+    return None, None
+
+
+def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate,
+                  side, mem_snapshot):
     """Budget-grouped encode/decode over the survivors on any backend.
 
     Returns (mean_chunks, bytes_sent, rho_round, cstate)."""
@@ -162,13 +236,6 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate):
     track = _should_track(pipe, cfg)
     n_eff = part.n_survivors
     n_chunks = xs_chunks.shape[1]
-
-    mem_snapshot = None
-    side = None
-    if pipe.has_client_temporal:
-        mem_snapshot = cstate.memory  # pre-update: what clients encode against
-    elif cfg.temporal or (pipe.temporal_stage is not None):
-        side = server_lib.side_info_for(state_srv, temporal=True)
 
     mean_chunks, bytes_sent, rho_parts = None, 0, []
     for k_g, ids_g in groups:
@@ -180,13 +247,17 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate):
         )
         if cfg.backend == "local":
             dec, cstate, payloads = _group_local(
-                pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate
+                pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate,
+                overlap=cfg.overlap, overlap_tile=cfg.overlap_tile,
             )
             bytes_sent += pipe_g.payload_nbytes(n_chunks) * len(ids_g)
-            rho_g = (
-                server_lib.measure_rho(pipe_g, key, payloads, ids_g)
-                if track else None
-            )
+            if not track:
+                rho_g = None
+            elif payloads is not None:
+                rho_g = server_lib.measure_rho(pipe_g, key, payloads, ids_g)
+            else:  # overlapped path: payloads stayed tile-local; re-derive
+                delta = xs_chunks if side is None else xs_chunks - side[None]
+                rho_g = _measure_rho_dist(pipe_g, key, delta, ids_g, pre_state)
         elif cfg.backend in ("gspmd", "shard_map"):
             dec, cstate, nbytes_g, delta = _group_dist(
                 pipe_g, key, xs_chunks, ids_g, side, cstate, cfg
@@ -213,6 +284,104 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate):
     return mean_chunks, bytes_sent, rho_round, cstate
 
 
+def _stale_arrival_bytes(pipe, buf: _StaleBuffer, cohort, n_chunks: int) -> int:
+    """Wire bytes of ALL late arrivals in ``buf`` — every payload that lands
+    is ledgered, whether the decode admits it or a fresh report supersedes
+    it (the transmission happened either way)."""
+    return sum(
+        pipe.with_budget(k_g).payload_nbytes(n_chunks) * len(ids_g)
+        for k_g, ids_g in cohort.budget_groups(buf.ids, pipe.k)
+    )
+
+
+def _decode_stale(pipe, buf: _StaleBuffer, admit: np.ndarray, cohort,
+                  state_srv):
+    """Admit round t-1's late payloads into this round's decode.
+
+    Re-derives the admitted stragglers' payloads from the buffered encode
+    inputs (their OWN round key / side information — encode is deterministic
+    in them), tags them ``staleness=1``, and decodes per budget group exactly
+    like a fresh group. The stale decode is a pure server-side operation:
+    the payloads already arrived, so it runs on the local pipeline path
+    whatever backend carries the fresh traffic.
+
+    Returns the stale mean (C, d_block).
+    """
+    pos = {int(i): j for j, i in enumerate(buf.ids)}
+    n_adm = len(admit)
+    mean = None
+    for k_g, ids_g in cohort.budget_groups(admit, pipe.k):
+        if len(ids_g) == 0:
+            continue
+        pipe_g = server_lib.resolve_pipeline(
+            pipe.with_budget(k_g), state_srv, len(ids_g)
+        )
+        sel = np.asarray([pos[int(i)] for i in ids_g])
+        ids_j = jnp.asarray(ids_g)
+        st_g = None
+        if buf.mem_rows is not None:
+            # per-client temporal: each straggler encoded against its OWN
+            # memory snapshot (ClientState row at its encode time)
+            st_g = ClientState(ef=None, memory=buf.mem_rows[sel])
+        payloads, _ = pipe_g.encode_all(
+            buf.key, buf.xs_rows[sel], client_ids=ids_j, side_info=buf.side,
+            states=st_g,
+        )
+        payloads = with_staleness(payloads, 1)
+        dec_side = buf.side
+        if buf.mem_rows is not None:
+            dec_side = jnp.mean(buf.mem_rows[sel], axis=0)
+        dec = pipe_g.decode(
+            buf.key, payloads, len(ids_g), client_ids=ids_j, side_info=dec_side
+        )
+        w = len(ids_g) / n_adm
+        mean = dec * w if mean is None else mean + dec * w
+    return mean
+
+
+def _advance_straggler_state(pipe, key, xs_chunks, stragglers, cohort, cstate):
+    """Async mode: stragglers DID encode this round (late), so their
+    client-held temporal memories advance exactly as a survivor's would —
+    the server mirrors the update when the payload arrives next round."""
+    if cstate is None or not pipe.has_client_temporal:
+        return cstate
+    for k_g, ids_g in cohort.budget_groups(stragglers, pipe.k):
+        if len(ids_g) == 0:
+            continue
+        ids_j = jnp.asarray(ids_g)
+        st_g = jax.tree.map(lambda a: a[ids_j], cstate)
+        _, st_new = pipe.with_budget(k_g).encode_all(
+            key, xs_chunks[ids_g], client_ids=ids_j, states=st_g
+        )
+        if st_new is not None:
+            cstate = _scatter_rows(cstate, st_new, ids_j)
+    return cstate
+
+
+def _validate_cfg(pipe, cfg):
+    if cfg.async_rounds:
+        if cfg.staleness not in (0, 1):
+            raise ValueError(
+                f"async rounds support staleness 0 (drop late payloads) or 1 "
+                f"(admit next round); got {cfg.staleness}"
+            )
+        if pipe.has_ef:
+            raise ValueError(
+                "error feedback does not compose with async rounds: the EF "
+                "residual is defined by what the server RECEIVED, which is "
+                "unknown while a payload is still in flight — drop the "
+                "ErrorFeedback stage or run sync rounds"
+            )
+    if cfg.overlap:
+        if pipe.stateful:
+            raise ValueError(
+                "overlap=True requires a stateless pipeline: EF residuals "
+                "and temporal-memory updates are round-synchronous (they "
+                "need the whole payload before the next round encodes)"
+            )
+        collectives.check_streamable(pipe)
+
+
 def run_rounds(task: Task, spec, cohort: Cohort | None = None,
                cfg: RoundConfig = RoundConfig()):
     """Drive ``cfg.n_rounds`` federated rounds of ``task`` under ``spec`` (a
@@ -220,7 +389,15 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
 
     Returns (final task state, History). The recorded per-round ``mse`` is
     against the SURVIVORS' true mean — the quantity the estimator actually
-    targets once stragglers are dropped.
+    targets once stragglers are dropped; ``mse_pop`` is against ALL clients'
+    current-round mean (the quantity FL ultimately wants), which is where
+    admitting a late payload instead of dropping it shows up.
+
+    Async mode (``cfg.async_rounds``): stragglers encode late; their
+    payloads are buffered and admitted into the next round's decode at
+    staleness 1 (``cfg.staleness=0`` drops them — the pure-scheduling
+    ablation). With ``cohort.dropout == 0`` async output is bit-identical
+    to sync.
     """
     pipe = as_pipeline(spec)
     cohort = cohort or Cohort(n_clients=task.n_clients)
@@ -232,6 +409,7 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
             "require backend='local': the driver mirrors each client's "
             "ClientState row"
         )
+    _validate_cfg(pipe, cfg)
 
     key = jax.random.key(cfg.seed)
     state = task.init(key)
@@ -239,22 +417,69 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
     hist = History()
     n_chunks = chunking.num_chunks(task.dim, pipe.d_block)
     cstate = cohort.init_state(pipe, n_chunks)
+    stale_buf: _StaleBuffer | None = None
 
     for t in range(cfg.n_rounds):
         rkey = jax.random.fold_in(key, t)
         vecs = task.client_vectors(state, rkey)  # (n, dim)
         part = cohort.sample_round(cfg.seed, t)
         xs_chunks = jax.vmap(lambda v: chunking.chunk(v, pipe.d_block))(vecs)
+        side, mem_snapshot = _side_and_memory(pipe, cfg, state_srv, cstate)
 
         mean_chunks, nbytes, rho_round, cstate = _decode_round(
-            pipe, rkey, xs_chunks, part, cohort, state_srv, cfg, cstate
+            pipe, rkey, xs_chunks, part, cohort, state_srv, cfg, cstate,
+            side, mem_snapshot,
         )
+
+        # ---- staleness-1 admission: last round's late payloads land now.
+        # EVERY arrival is ledgered (it crossed the wire), but a client that
+        # ALSO reported fresh this round supersedes its own stale payload —
+        # the fresh one carries strictly newer information, so only the
+        # non-superseded set enters the decode.
+        n_stale, stale_nbytes = 0, 0
+        if cfg.async_rounds and stale_buf is not None and cfg.staleness >= 1:
+            stale_nbytes = _stale_arrival_bytes(pipe, stale_buf, cohort,
+                                                n_chunks)
+            nbytes += stale_nbytes
+            admit = np.setdiff1d(stale_buf.ids, part.survivors)
+            if len(admit):
+                stale_mean = _decode_stale(
+                    pipe, stale_buf, admit, cohort, state_srv
+                )
+                n_stale = len(admit)
+                mean_chunks = server_lib.admit_stale(
+                    mean_chunks, part.n_survivors, stale_mean, n_stale,
+                    cfg.stale_weight,
+                )
+
+        # ---- this round's stragglers encode NOW (overlapping the server's
+        # decode above); buffer their encode inputs for admission at t+1.
+        # staleness=0 drops late payloads entirely: no buffer, and no state
+        # advance either (a payload the server never sees must not move the
+        # memory mirror) — exactly the sync drop semantics.
+        if cfg.async_rounds and cfg.staleness >= 1 and len(part.stragglers):
+            strag_j = jnp.asarray(part.stragglers)
+            stale_buf = _StaleBuffer(
+                key=rkey, ids=part.stragglers, xs_rows=xs_chunks[strag_j],
+                side=side,
+                mem_rows=None if mem_snapshot is None else mem_snapshot[strag_j],
+            )
+            cstate = _advance_straggler_state(
+                pipe, rkey, xs_chunks, part.stragglers, cohort, cstate
+            )
+        else:
+            stale_buf = None
 
         true_mean = jnp.mean(xs_chunks[part.survivors], axis=0)
         hist.mse.append(float(correlation.mse(mean_chunks, true_mean)))
+        hist.mse_pop.append(
+            float(correlation.mse(mean_chunks, jnp.mean(xs_chunks, axis=0)))
+        )
         hist.bytes.append(int(nbytes))
         hist.n_survivors.append(part.n_survivors)
         hist.n_sampled.append(part.n_sampled)
+        hist.n_stale.append(n_stale)
+        hist.stale_bytes.append(int(stale_nbytes))
         hist.rho_hat.append(float("nan") if rho_round is None else rho_round)
 
         server_lib.commit_round(state_srv, mean_chunks)

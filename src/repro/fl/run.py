@@ -14,9 +14,14 @@
     PYTHONPATH=src python -m repro.fl.run --task drift --estimator rand_k \
         --client-temporal
 
+    # async rounds: stragglers' late payloads admitted at staleness 1
+    # instead of dropped (docs/DESIGN.md §9):
+    PYTHONPATH=src python -m repro.fl.run --task drift --dropout 0.3 --async
+
 Per-round lines report the task metric, the MSE against the survivors' true
-mean, and the cumulative payload-byte ledger; --compare prints an
-MSE-at-equal-bytes table across the baseline estimator family.
+mean, the cumulative payload-byte ledger, and (async) admitted stale
+payloads; --compare prints an MSE-at-equal-bytes table across the baseline
+estimator family.
 """
 from __future__ import annotations
 
@@ -41,16 +46,39 @@ def build_parser() -> argparse.ArgumentParser:
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--task", default="power_iteration",
                     choices=["power_iteration", "kmeans", "linear_regression",
-                             "logistic_regression", "dme", "drift"])
-    ap.add_argument("--estimator", default="rand_proj_spatial")
+                             "logistic_regression", "dme", "drift"],
+                    help="paper §5 workload or correlation-dialed synthetic")
+    ap.add_argument("--estimator", default="rand_proj_spatial",
+                    help="registered sparsifier name (codec.SPARSIFIERS)")
     ap.add_argument("--transform", default="avg",
                     help="one|max|avg|opt|wavg (wavg = online-R practical variant)")
-    ap.add_argument("--rounds", type=int, default=20)
-    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--rounds", type=int, default=20,
+                    help="federated rounds to drive")
+    ap.add_argument("--clients", type=int, default=10,
+                    help="cohort size n")
     ap.add_argument("--k", type=int, default=0, help="0 => d_block // 10")
     ap.add_argument("--d-block", type=int, default=0, help="0 => task dim (<=1024)")
-    ap.add_argument("--participation", type=float, default=1.0)
-    ap.add_argument("--dropout", type=float, default=0.0)
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of the cohort sampled per round")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="P(sampled client misses the round deadline); sync "
+                         "rounds drop these stragglers, --async admits them "
+                         "late")
+    ap.add_argument("--async", dest="async_rounds", action="store_true",
+                    help="async rounds: don't wait for stragglers — buffer "
+                         "their late payloads and admit them into the next "
+                         "round's decode (staleness-1 aggregation)")
+    ap.add_argument("--staleness", type=int, default=1, choices=[0, 1],
+                    help="max admitted payload age under --async: 1 admits "
+                         "late payloads next round, 0 drops them (scheduling-"
+                         "only ablation)")
+    ap.add_argument("--stale-weight", type=float, default=1.0,
+                    help="per-client weight of an admitted stale payload "
+                         "relative to a fresh one")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffered chunk streaming: encode chunk c+1 "
+                         "while chunk c's payload is in flight (bit-identical "
+                         "to the sync decode)")
     ap.add_argument("--temporal", action="store_true",
                     help="decode deltas against the server's previous estimate")
     ap.add_argument("--client-temporal", action="store_true",
@@ -61,11 +89,14 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["float32", "bfloat16", "int8"],
                     help="quantizer stage appended to the pipeline")
     ap.add_argument("--backend", default="local",
-                    choices=["local", "gspmd", "shard_map"])
+                    choices=["local", "gspmd", "shard_map"],
+                    help="round execution backend (docs/API.md backend matrix)")
     ap.add_argument("--rho", type=float, default=0.9, help="dme/drift correlation")
-    ap.add_argument("--scheme", default="iid", choices=["iid", "band", "dirichlet"])
+    ap.add_argument("--scheme", default="iid", choices=["iid", "band", "dirichlet"],
+                    help="non-IID data partition for the §5 tasks")
     ap.add_argument("--alpha", type=float, default=0.3, help="dirichlet alpha")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="round key + participation draw seed")
     ap.add_argument("--compare", action="store_true",
                     help="run the rand_k/rand_k_spatial/rand_proj_spatial family")
     ap.add_argument("--smoke", action="store_true",
@@ -115,6 +146,10 @@ def run_one(task, args, name, est_kw):
     cfg = rounds_lib.RoundConfig(
         n_rounds=3 if args.smoke else args.rounds, seed=args.seed,
         temporal=args.temporal, backend=args.backend, mesh=mesh,
+        async_rounds=getattr(args, "async_rounds", False),
+        staleness=getattr(args, "staleness", 1),
+        stale_weight=getattr(args, "stale_weight", 1.0),
+        overlap=getattr(args, "overlap", False),
     )
     state, hist = rounds_lib.run_rounds(task, spec, cohort, cfg)
     return spec, state, hist
@@ -123,12 +158,14 @@ def run_one(task, args, name, est_kw):
 def report(task, spec, hist, verbose=True):
     if verbose:
         cum = 0
-        for t, (m, mse, b, ns) in enumerate(
-            zip(hist.metric, hist.mse, hist.bytes, hist.n_survivors)
+        for t, (m, mse, b, ns, nst) in enumerate(
+            zip(hist.metric, hist.mse, hist.bytes, hist.n_survivors,
+                hist.n_stale)
         ):
             cum += b
+            stale = f"  stale={nst}" if nst else ""
             print(f"  round {t:3d}  {task.metric_name}={m:.5f}  mse={mse:.6f}  "
-                  f"survivors={ns}  bytes={cum}")
+                  f"survivors={ns}  bytes={cum}{stale}")
     mean_mse = float(np.nanmean(hist.mse))
     final = ("" if task.metric is None
              else f"final_{task.metric_name}={hist.metric[-1]:.5f}  ")

@@ -30,6 +30,12 @@ legitimately sees (payloads and its own decode history):
    live in ``codec.ClientState`` (a ``Temporal`` stage in the pipeline) and
    are driven by ``fl.rounds`` — the server's role there is adding back the
    survivors' mean memory and mirroring the deterministic memory updates.
+
+4. **Stale-payload admission** (async rounds, docs/DESIGN.md §9.2) —
+   ``admit_stale`` re-weights an admitted staleness-1 group's decode into
+   the fresh survivors' mean by client count. The admission decode itself
+   runs in ``fl.rounds`` (with the stale group's own round key and side
+   information); the combine is the server-side policy knob.
 """
 from __future__ import annotations
 
@@ -124,6 +130,24 @@ def ema_update(state: ServerState, rho_round: float, gamma: float = 0.3) -> None
         else (1.0 - gamma) * state.r_ema + gamma * rho_round
     )
     state.r_history.append(rho_round)
+
+
+def admit_stale(fresh_mean, n_fresh: int, stale_mean, n_stale: int,
+                stale_weight: float = 1.0):
+    """Combine the fresh survivors' decode with an admitted stale group's
+    (async rounds, staleness-1 aggregation — docs/DESIGN.md §9.2).
+
+    Client-count weighting with ``stale_weight`` per stale client:
+
+        (n_fresh * fresh + w * n_stale * stale) / (n_fresh + w * n_stale)
+
+    At ``stale_weight=1`` this treats a one-round-late payload as a full
+    participant — the right call when the drift per round is small relative
+    to per-client noise (the regime the temporal machinery targets);
+    down-weight toward 0 to fade admission out as drift grows.
+    """
+    w = stale_weight * n_stale
+    return (n_fresh * fresh_mean + w * stale_mean) / (n_fresh + w)
 
 
 def commit_round(state: ServerState, mean_chunks) -> None:

@@ -49,10 +49,17 @@ def init_train_state(cfg, optimizer, params, dme_spec=None, n_clients: int = 0):
 
 
 def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
-                    client_axes=("pod",), seed: int = 0, dme_impl: str = "auto"):
+                    client_axes=("pod",), seed: int = 0, dme_impl: str = "auto",
+                    dme_overlap: bool = False, dme_overlap_tile: int = 1):
+    """``dme_overlap=True`` streams the gradient's chunk axis through the
+    collectives' double buffer (encode chunk c+1 while chunk c's payload is
+    in flight) — bit-identical to the synchronous exchange, so it composes
+    with EF and both impls; requires a chunk-streamable pipeline."""
     base_key = jax.random.key(seed)
     if dme_spec is not None:
         dme_spec = as_pipeline(dme_spec)
+        if dme_overlap:
+            collectives.check_streamable(dme_spec)
 
     if dme_spec is None:
 
@@ -90,10 +97,12 @@ def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
             grad_mean, info, new_ef = collectives.compressed_mean_tree_shardmap(
                 dme_spec, key, grads, mesh, param_pspecs, client_axes,
                 ef_chunks=state.get("ef"),
+                overlap=dme_overlap, overlap_tile=dme_overlap_tile,
             )
         else:
             grad_mean, info, new_ef = collectives.compressed_mean_tree(
-                dme_spec, key, grads, shardings, ef_chunks=state.get("ef")
+                dme_spec, key, grads, shardings, ef_chunks=state.get("ef"),
+                overlap=dme_overlap, overlap_tile=dme_overlap_tile,
             )
         params, opt, om = optimizer.update(grad_mean, state["opt"], params)
         new_state = {"opt": opt}

@@ -1,0 +1,27 @@
+"""Tier-1 docs hygiene: the markdown link graph must stay intact.
+
+The full docs CI job (.github/workflows/ci.yml, ``docs``) also EXECUTES the
+README / DESIGN.md / API.md python blocks; that is subprocess-heavy, so
+tier-1 only pins the fast pure-file checks of tools/check_docs.py.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_markdown_links_resolve():
+    assert check_docs.check_links() == []
+
+
+def test_snippet_extraction_sees_quickstarts():
+    """The executable-snippet harness must actually find the quickstart
+    blocks — an empty extraction would make the CI job vacuously green."""
+    readme = os.path.join(check_docs.REPO, "README.md")
+    assert len(check_docs.python_blocks(readme)) >= 2
+    api = os.path.join(check_docs.REPO, "docs", "API.md")
+    assert len(check_docs.python_blocks(api)) >= 1

@@ -1,0 +1,176 @@
+#!/usr/bin/env python
+"""Docs CI: markdown link check + executable snippet check.
+
+    python tools/check_docs.py               # both checks
+    python tools/check_docs.py --links-only  # fast, no deps (tier-1 test)
+    python tools/check_docs.py --snippets-only
+
+Link check: every relative markdown link in README.md, ROADMAP.md, and
+docs/*.md must resolve to a file in the repo; ``#anchor`` fragments must
+match a heading in the target (GitHub slugification). External links
+(http/https/mailto) and GitHub web-relative links that escape the repo root
+(e.g. the CI badge's ``../../actions/...``) are skipped.
+
+Snippet check: ```python fenced blocks in README.md, docs/DESIGN.md and
+docs/API.md are executed — cumulatively per file, in one subprocess with
+``PYTHONPATH=src`` — so documented quickstarts cannot rot. A block is
+exempted by putting ``<!-- docs-ci: skip -->`` on the line directly above
+its opening fence (for deliberately illustrative fragments).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import glob
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_FILES = ["README.md", "ROADMAP.md"] + sorted(
+    os.path.relpath(p, REPO) for p in glob.glob(os.path.join(REPO, "docs", "*.md"))
+)
+SNIPPET_FILES = ["README.md", "docs/DESIGN.md", "docs/API.md"]
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_SKIP_MARK = "<!-- docs-ci: skip -->"
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor slugification (best effort)."""
+    h = heading.strip().lower()
+    h = re.sub(r"[`*_]", "", h)                  # inline formatting
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)  # links -> text
+    h = re.sub(r"[^\w\s-]", "", h, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", h.strip())
+
+
+@functools.cache  # one parse per file; paths are stable for the process
+def heading_slugs(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # strip fenced code blocks so '# comment' lines aren't headings
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    slugs: set = set()
+    for m in _HEADING_RE.finditer(text):
+        slug, i = github_slug(m.group(1)), 0
+        while (s := slug if i == 0 else f"{slug}-{i}") in slugs:
+            i += 1
+        slugs.add(s)
+    return slugs
+
+
+def check_links() -> list[str]:
+    problems = []
+    for rel in LINK_FILES:
+        path = os.path.join(REPO, rel)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, ...
+                continue
+            if target.startswith("#"):
+                if target[1:] not in heading_slugs(path):
+                    problems.append(f"{rel}: broken anchor {target!r}")
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not resolved.startswith(REPO + os.sep):
+                continue  # GitHub web-relative (badge links etc.)
+            if not os.path.exists(resolved):
+                problems.append(f"{rel}: broken link {m.group(1)!r}")
+                continue
+            if frag and resolved.endswith(".md"):
+                if frag not in heading_slugs(resolved):
+                    problems.append(
+                        f"{rel}: broken anchor {m.group(1)!r}")
+    return problems
+
+
+def python_blocks(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    blocks, cur, in_block, skip_next = [], [], False, False
+    for line in lines:
+        if not in_block and line.strip() == _SKIP_MARK:
+            skip_next = True
+            continue
+        if not in_block and re.match(r"^```python\s*$", line.strip()):
+            in_block, cur = True, []
+            continue
+        if in_block and line.strip() == "```":
+            in_block = False
+            if not skip_next:
+                blocks.append("\n".join(cur))
+            skip_next = False
+            continue
+        if in_block:
+            cur.append(line)
+        elif line.strip():
+            skip_next = False  # marker binds to the NEXT fence only
+    return blocks
+
+
+def check_snippets() -> list[str]:
+    problems = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    for rel in SNIPPET_FILES:
+        blocks = python_blocks(os.path.join(REPO, rel))
+        if not blocks:
+            continue
+        # cumulative: later blocks may use names the earlier ones defined
+        program = "\n\n".join(blocks)
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-c", program], cwd=REPO, env=env,
+                capture_output=True, text=True, timeout=480,
+            )
+        except subprocess.TimeoutExpired:
+            problems.append(
+                f"{rel}: its {len(blocks)} python block(s) did not finish "
+                "within 480s — a documented snippet hangs or compiles "
+                "something CI-sized")
+            continue
+        if proc.returncode != 0:
+            tail = "\n".join(proc.stderr.strip().splitlines()[-12:])
+            problems.append(
+                f"{rel}: executing its {len(blocks)} python block(s) failed:\n"
+                f"{tail}")
+        else:
+            print(f"  {rel}: {len(blocks)} python block(s) ran clean")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--links-only", action="store_true")
+    ap.add_argument("--snippets-only", action="store_true")
+    args = ap.parse_args()
+    problems = []
+    if not args.snippets_only:
+        print(f"link check over {', '.join(LINK_FILES)}")
+        problems += check_links()
+    if not args.links_only:
+        print(f"snippet check over {', '.join(SNIPPET_FILES)}")
+        problems += check_snippets()
+    for p in problems:
+        print(f"FAIL: {p}", file=sys.stderr)
+    if problems:
+        return 1
+    print("docs OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
