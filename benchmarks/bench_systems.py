@@ -1,5 +1,6 @@
 """Paper Fig. 5 (encode/decode wall-clock) + Fig. 7 (rank(S)) + kernel
-micro-benchmarks (FWHT pallas-vs-oracle) + framework-scale chunked DME."""
+micro-benchmarks (FWHT pallas-vs-oracle) + framework-scale chunked DME +
+the sharded-server-decode (chunk ownership) intra-pod traffic model."""
 from __future__ import annotations
 
 import jax
@@ -9,6 +10,8 @@ import numpy as np
 from repro.core import codec
 from repro.core import beta as beta_lib
 from repro.core.estimators import base as est_base
+from repro.dist import collectives
+from repro.dist.sharding import chunk_ownership
 from repro.kernels import ops as kops
 
 from .common import rows, timed
@@ -85,8 +88,49 @@ def chunked_scale(out):
              f"{d_flat / sec / 1e6:.1f} Mcoord/s")
 
 
+def ownership(out, n=32, k=64, d=512, n_chunks=64):
+    """Sharded server decode (docs/DESIGN.md §10): modelled intra-pod
+    receive traffic, all-gather vs chunk-ownership routing, across shard
+    counts — the ``intra_pod_bytes`` columns that land in BENCH_*.json —
+    plus the measured owner-partitioned decode walltime (parity with the
+    monolithic decode is tested; here we record that the partition does not
+    cost wall-clock).
+
+    The reduction regime is (n - n/s) * payload_bytes > C * d * 4 (remote
+    payloads outweigh the decoded vector); the assertion guards the model
+    the EXPERIMENTS.md section documents.
+    """
+    pipe = codec.as_pipeline(codec.RandK(k=k, d_block=d))
+    for n_shards in (2, 4, 8, 16):
+        plan = chunk_ownership(n_chunks, n_shards)
+        t = collectives.intra_pod_traffic(pipe, n, n_chunks, n_shards,
+                                          plan=plan)
+        ag, own = t["intra_pod_bytes_allgather"], t["intra_pod_bytes_ownership"]
+        assert own < ag, (own, ag)  # the acceptance regime for this config
+        rows(out, f"ownership/intra_pod/n{n}_k{k}_d{d}_C{n_chunks}/s{n_shards}",
+             0, f"allgather={ag};ownership={own};reduction={ag / own:.2f}x")
+
+    # measured: the owner-partitioned decode vs the monolithic decode
+    rng = np.random.default_rng(7)
+    xs = jnp.asarray(rng.standard_normal((n, n_chunks, d)), jnp.float32)
+    key = jax.random.key(7)
+    payloads, _ = pipe.encode_all(key, xs)
+    sec_mono, _ = timed(
+        jax.jit(lambda kk: pipe.decode_payload(kk, payloads, n)), key)
+    rows(out, f"ownership/decode_monolithic/n{n}_k{k}_d{d}_C{n_chunks}",
+         sec_mono * 1e6, "server")
+    for n_shards in (4, 16):
+        plan = chunk_ownership(n_chunks, n_shards)
+        sec_own, _ = timed(
+            jax.jit(lambda kk: collectives.sharded_decode(
+                pipe, kk, payloads, n, plan)), key)
+        rows(out, f"ownership/decode_sharded/n{n}_k{k}_d{d}_C{n_chunks}/s{n_shards}",
+             sec_own * 1e6, f"{sec_mono / sec_own:.2f}x_vs_monolithic")
+
+
 def run(out):
     walltime(out)
     rank_s(out)
     fwht_kernel(out)
     chunked_scale(out)
+    ownership(out)

@@ -42,6 +42,7 @@ def smoke(out: list[str]) -> None:
         rows(out, f"smoke/mse_R{r:.1f}/n{n}_k{k}/{name}", sec * 1e6, f"{mse:.4f}")
 
     bench_systems.walltime(out, n=4, k=16, d=256)
+    bench_systems.ownership(out, n=8, k=64, d=128, n_chunks=8)
 
     from . import bench_fl
 

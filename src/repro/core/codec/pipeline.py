@@ -84,28 +84,76 @@ class Pipeline:
         return self.has_ef or self.has_client_temporal
 
     @property
-    def chunk_streamable(self) -> bool:
-        """True when encode/decode of a chunk *slice* is bit-identical to the
-        same rows of a whole-vector encode/decode — the precondition for the
-        overlapped (double-buffered) collectives (``dist.collectives``,
-        ``overlap=True``).
+    def non_streamable_stage(self):
+        """The first stage that breaks chunk-streamability, as a
+        ``(stage, reason)`` pair — or None when the pipeline streams.
 
-        Holds when per-chunk randomness does not depend on the chunk's
-        position in the array: data-dependent sparsifiers (top_k) and the
-        identity are position-free; the rand_k / SRHT family is position-free
-        iff ``shared_randomness=True`` (one draw serves every chunk). It
-        breaks for ``shared_randomness=False`` and for wangni / induced
-        (per-chunk ``fold_in(ckey, chunk_position)`` keys) and for
-        ``Int8Quant`` (stochastic-rounding noise is drawn over the full array
-        shape, so a slice draws different noise).
+        Streamability breaks when per-chunk ENCODE randomness depends on the
+        chunk's position in the array: data-dependent sparsifiers (top_k) and
+        the identity are position-free; the rand_k / SRHT family is
+        position-free iff ``shared_randomness=True`` (one draw serves every
+        chunk); wangni / induced key every chunk by position
+        (``fold_in(ckey, chunk_position)``); ``Int8Quant`` draws its
+        stochastic-rounding noise over the full array shape, so a slice draws
+        different noise.
         """
         sp = self.sparsifier
         if sp.name not in ("top_k", "identity") and not getattr(
             sp, "shared_randomness", False
         ):
-            return False
+            return sp, (
+                "keys each chunk's encode randomness by its position in the "
+                "array (shared_randomness=False / per-chunk fold_in), so a "
+                "chunk slice encodes differently than the same rows of the "
+                "full array"
+            )
         q = self.quantizer
-        return q is None or q.name != "int8"
+        if q is not None and q.name == "int8":
+            return q, (
+                "draws stochastic-rounding noise over the full array shape, "
+                "so a chunk slice draws different noise"
+            )
+        return None
+
+    @property
+    def chunk_streamable(self) -> bool:
+        """True when encode/decode of a chunk *slice* is bit-identical to the
+        same rows of a whole-vector encode/decode — the precondition for the
+        overlapped (double-buffered) collectives (``dist.collectives``,
+        ``overlap=True``). See ``non_streamable_stage`` for the reasons."""
+        return self.non_streamable_stage is None
+
+    @property
+    def non_shardable_stage(self):
+        """The first stage whose DECODE mixes statistics across chunks, as a
+        ``(stage, reason)`` pair — or None when every chunk's decode reads
+        only its own payload rows (plus its global position).
+
+        This is the precondition for the sharded server decode
+        (``dist.collectives``, ``ownership=``): an owner decodes only the
+        chunk slice it owns, so a cross-chunk decode statistic would change
+        with the partition. It is strictly weaker than ``chunk_streamable``
+        — clients always encode their FULL vector, so position-keyed encodes
+        (wangni, induced, ``shared_randomness=False``) and full-array
+        rounding noise (``Int8Quant``) are all fine; only
+        ``rand_k_spatial(r_mode='est')`` breaks it (its online R-hat pools
+        the scatter statistics of every chunk into one scalar rho).
+        """
+        sp = self.sparsifier
+        if sp.name == "rand_k_spatial" and getattr(sp, "r_mode", "fixed") == "est":
+            return sp, (
+                "pools its online R-hat statistic across ALL chunks (one "
+                "scalar rho per decode), so an owner's chunk-slice decode "
+                "would estimate a different rho than the full decode"
+            )
+        return None
+
+    @property
+    def decode_shardable(self) -> bool:
+        """True when the decode of a chunk slice (at its global offset) is
+        bit-identical to the same rows of the full decode — the precondition
+        for chunk-ownership sharded decoding."""
+        return self.non_shardable_stage is None
 
     # convenience forwards (the attributes drivers/benchmarks report on)
     @property
@@ -204,11 +252,17 @@ class Pipeline:
             names = tuple(n for n in arrays if n in LEGACY_VALUE_NAMES)
         return self.quantizer.decode(arrays, names)
 
-    def decode_payload(self, key, payloads, n: int, client_ids=None):
-        """Stacked payloads (leading n) -> (C, d_block) mean estimate."""
+    def decode_payload(self, key, payloads, n: int, client_ids=None,
+                       chunk_offset=0):
+        """Stacked payloads (leading n) -> (C, d_block) mean estimate.
+
+        ``chunk_offset``: global position of the payloads' first chunk — set
+        by the sharded server decode, where an owner decodes only its own
+        chunk slice (``dist.collectives``, ``ownership=``)."""
         pipe = self._for_payload(payloads)
         arrays = pipe._dequantize(payloads)
-        return pipe.sparsifier.decode(key, arrays, n, client_ids=client_ids)
+        return pipe.sparsifier.decode(key, arrays, n, client_ids=client_ids,
+                                      chunk_offset=chunk_offset)
 
     def self_decode(self, key, client_id, payload):
         """One client's unbiased view of what the server attributes to it."""
@@ -261,11 +315,14 @@ class Pipeline:
                 new_mem = mem + eta * recon
         return payload, ClientState(ef=new_ef, memory=new_mem)
 
-    def decode(self, key, payloads, n: int, *, client_ids=None, side_info=None):
+    def decode(self, key, payloads, n: int, *, client_ids=None, side_info=None,
+               chunk_offset=0):
         """Server decode of stacked payloads; ``side_info`` is whatever must
         be added back (the broadcast estimate, or the mean of the survivors'
-        mirrored memories for per-client temporal pipelines)."""
-        out = self.decode_payload(key, payloads, n, client_ids=client_ids)
+        mirrored memories for per-client temporal pipelines); ``chunk_offset``
+        is the global position of the first chunk (owner-sliced decode)."""
+        out = self.decode_payload(key, payloads, n, client_ids=client_ids,
+                                  chunk_offset=chunk_offset)
         return out if side_info is None else out + side_info
 
     # ------------------------------------------------------------ batched

@@ -39,8 +39,14 @@ class Sparsifier:
     def encode(self, key, client_id, x_cd) -> dict:
         return self.codec.encode(self, key, client_id, x_cd)
 
-    def decode(self, key, arrays, n, client_ids=None):
-        return self.codec.decode(self, key, arrays, n, client_ids=client_ids)
+    def decode(self, key, arrays, n, client_ids=None, chunk_offset=0):
+        """``chunk_offset``: global position of the first chunk in ``arrays``.
+        Non-zero for an owner's chunk-slice decode (the sharded server decode,
+        ``dist.collectives``): position-keyed codecs re-derive randomness from
+        the global chunk id, so a slice decodes bit-identically to the same
+        rows of a full-array decode."""
+        return self.codec.decode(self, key, arrays, n, client_ids=client_ids,
+                                 chunk_offset=chunk_offset)
 
     @property
     def supports_self_decode(self) -> bool:

@@ -143,9 +143,11 @@ def encode(spec, key, client_id, x_cd, side_info=None):
     return _pipe(spec).encode(key, client_id, x_cd, side_info=side_info)[0]
 
 
-def decode(spec, key, payloads, n: int, client_ids=None, side_info=None):
+def decode(spec, key, payloads, n: int, client_ids=None, side_info=None,
+           chunk_offset=0):
     return _pipe(spec).decode(
-        key, payloads, n, client_ids=client_ids, side_info=side_info
+        key, payloads, n, client_ids=client_ids, side_info=side_info,
+        chunk_offset=chunk_offset,
     )
 
 

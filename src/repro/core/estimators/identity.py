@@ -10,7 +10,7 @@ def encode(spec, key, client_id, x_cd):
     return {"vals": x_cd}
 
 
-def decode(spec, key, payloads, n, client_ids=None):
+def decode(spec, key, payloads, n, client_ids=None, chunk_offset=0):
     return jnp.mean(payloads["vals"], axis=0)
 
 

@@ -41,7 +41,8 @@ def encode(spec, key, client_id, x_cd):
     }
 
 
-def decode(spec, key, payloads, n, client_ids=None):
+def decode(spec, key, payloads, n, client_ids=None, chunk_offset=0):
+    # both index sets travel in the payload: position-free decode.
     k1, k2 = _split(spec)
     d = spec.d_block
     top = top_k.scatter_mean(payloads["top_vals"], payloads["top_idx"], n, d)

@@ -13,14 +13,22 @@ import jax.numpy as jnp
 from . import base
 
 
-def _indices(spec: base.EstimatorSpec, key, client_id, n_chunks: int):
-    """(C, k) int32 coordinate choices for one client."""
+def _indices(spec: base.EstimatorSpec, key, client_id, n_chunks: int,
+             chunk_offset=0):
+    """(C, k) int32 coordinate choices for one client.
+
+    ``chunk_offset`` is the GLOBAL position of the first chunk: per-chunk
+    randomness (shared_randomness=False) is keyed by global chunk id, so a
+    chunk-slice decode (the sharded server decode, dist.sharding chunk
+    ownership) re-derives exactly the indices of a full-array decode.
+    """
     ckey = base.client_key(key, client_id)
     d, k = spec.d_block, spec.k
     if spec.shared_randomness:
         idx = jax.random.permutation(ckey, d)[:k]
         return jnp.broadcast_to(idx, (n_chunks, k))
-    keys = jax.vmap(base.chunk_key, in_axes=(None, 0))(ckey, jnp.arange(n_chunks))
+    positions = chunk_offset + jnp.arange(n_chunks)
+    keys = jax.vmap(base.chunk_key, in_axes=(None, 0))(ckey, positions)
     return jax.vmap(lambda kk: jax.random.permutation(kk, d)[:k])(keys)
 
 
@@ -31,18 +39,20 @@ def encode(spec, key, client_id, x_cd):
     return {"vals": vals}
 
 
-def scatter_sum_and_counts(spec, key, vals, n, client_ids=None):
+def scatter_sum_and_counts(spec, key, vals, n, client_ids=None, chunk_offset=0):
     """Common Rand-k / Rand-k-Spatial decode plumbing.
 
     vals: (n, C, k) -> (sum (C, d), counts (C, d)) of scattered payloads.
-    ``client_ids`` overrides the 0..n-1 id assignment (partial participation).
+    ``client_ids`` overrides the 0..n-1 id assignment (partial participation);
+    ``chunk_offset`` is the global position of vals' first chunk (owner-sliced
+    decode) — the scatter itself is per-chunk, so rows are independent.
     """
     c = vals.shape[1]
     d = spec.d_block
     ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
 
     def one(client_id, v):
-        idx = _indices(spec, key, client_id, c)
+        idx = _indices(spec, key, client_id, c, chunk_offset)
         s = jnp.zeros((c, d), v.dtype).at[jnp.arange(c)[:, None], idx].add(v)
         m = jnp.zeros((c, d), jnp.float32).at[jnp.arange(c)[:, None], idx].add(1.0)
         return s, m
@@ -51,8 +61,9 @@ def scatter_sum_and_counts(spec, key, vals, n, client_ids=None):
     return ss.sum(0), ms.sum(0)
 
 
-def decode(spec, key, payloads, n, client_ids=None):
-    s, _ = scatter_sum_and_counts(spec, key, payloads["vals"], n, client_ids)
+def decode(spec, key, payloads, n, client_ids=None, chunk_offset=0):
+    s, _ = scatter_sum_and_counts(spec, key, payloads["vals"], n, client_ids,
+                                  chunk_offset)
     return (spec.d_block / (spec.k * n)) * s
 
 

@@ -38,8 +38,9 @@ def _rho(spec, n, payloads, s, m):
     return transforms.clip_rho(r_hat / (n - 1.0), n)
 
 
-def decode(spec, key, payloads, n, client_ids=None):
-    s, m = rand_k.scatter_sum_and_counts(spec, key, payloads["vals"], n, client_ids)
+def decode(spec, key, payloads, n, client_ids=None, chunk_offset=0):
+    s, m = rand_k.scatter_sum_and_counts(spec, key, payloads["vals"], n,
+                                         client_ids, chunk_offset)
     rho = _rho(spec, n, payloads, s, m)
     b = beta_lib.rand_k_spatial_beta(n, spec.k, spec.d_block, rho)
     t = transforms.t_apply(m, rho)

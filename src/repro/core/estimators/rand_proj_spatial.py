@@ -190,7 +190,7 @@ def _decode_one_direct(spec, n, a, z, norm_sq):
     return scale * xh
 
 
-def decode(spec, key, payloads, n, client_ids=None):
+def decode(spec, key, payloads, n, client_ids=None, chunk_offset=0):
     vals = payloads["vals"]  # (n, C, k)
     norm_sq = payloads.get("norm_sq")  # (n, C) or None
     z = jnp.moveaxis(vals, 0, 1).astype(jnp.float32)  # (C, n, k)
@@ -206,8 +206,12 @@ def decode(spec, key, payloads, n, client_ids=None):
         nsq = None if norm_sq is None else nsq_c[:, None]
         return dec(spec, n, a, z_c[None], nsq)[0]
 
-    nsq_arg = jnp.zeros((c, n)) if norm_sq is None else jnp.moveaxis(norm_sq, 0, 1)
-    return jax.vmap(per_chunk)(jnp.arange(c), z, nsq_arg)
+    # chunk_offset keys the per-chunk {G_i} draws by GLOBAL chunk position,
+    # so an owner's chunk-slice decode re-derives the full decode's maps.
+    return jax.vmap(per_chunk)(
+        chunk_offset + jnp.arange(c), z,
+        jnp.zeros((c, n)) if norm_sq is None else jnp.moveaxis(norm_sq, 0, 1),
+    )
 
 
 def self_decode(spec, key, client_id, payload):

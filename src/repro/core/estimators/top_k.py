@@ -27,7 +27,9 @@ def scatter_mean(vals, idx, n, d):
     return jax.vmap(one)(vals, idx).sum(0) / n
 
 
-def decode(spec, key, payloads, n, client_ids=None):
+def decode(spec, key, payloads, n, client_ids=None, chunk_offset=0):
+    # indices travel in the payload, so the decode is chunk-position-free:
+    # chunk_offset (owner-sliced decode) is accepted and ignored.
     return scatter_mean(payloads["vals"], payloads["idx"], n, spec.d_block)
 
 

@@ -66,7 +66,9 @@ def encode(spec, key, client_id, x_cd):
     return {"vals": vals, "idx": idx}
 
 
-def decode(spec, key, payloads, n, client_ids=None):
+def decode(spec, key, payloads, n, client_ids=None, chunk_offset=0):
+    # encode keys chunks by position, but the chosen indices travel in the
+    # payload — the decode is position-free, so owner-sliced decodes work.
     return top_k.scatter_mean(payloads["vals"], payloads["idx"], n, spec.d_block)
 
 

@@ -4,9 +4,12 @@ rules, and pipeline parallelism.
 Modules:
     collectives — cross-client compressed-mean (the paper's DME as a
                   collective): chunked encode at each client, decode at the
-                  server, payload/byte accounting, error-feedback residuals.
+                  server (replicated, or owner-sharded via chunk ownership),
+                  payload/byte accounting incl. intra-pod traffic columns,
+                  error-feedback residuals.
     sharding    — divisibility-aware parameter / cache / batch placement over
-                  (pod, data, model) meshes.
+                  (pod, data, model) meshes, plus the chunk-ownership plans
+                  the sharded server decode partitions by.
     pipeline    — layer-pipelined application (GPipe schedule) over a mesh
                   axis.
 """

@@ -45,6 +45,25 @@ tests/test_async.py on all three fl backends); it therefore requires a
 ``chunk_streamable`` pipeline — per-chunk randomness independent of chunk
 position (see ``codec.Pipeline.chunk_streamable``) — and raises otherwise
 rather than silently changing the estimate.
+
+Sharded server decode (``ownership=``, docs/DESIGN.md §10): a
+``dist.sharding.ChunkOwnership`` plan assigns each mesh shard a contiguous
+slice of the chunk grid. Instead of all-gathering EVERY per-client payload to
+EVERY shard (server memory and intra-pod receive traffic O(n * k) per shard),
+payloads for chunk c are routed only to c's owner (an ``all_to_all`` over
+the client axes — reduce-scatter-style), the owner runs the codec decode for
+its slice at its global chunk offset, and the global mean is assembled with
+ONE ``all_gather`` of decoded means (d bytes per chunk, not n*k payload
+bytes). Bit-identical to the unsharded decode for every ``decode_shardable``
+pipeline (per-chunk decode reads only its own payload rows + its global
+position — everything except ``rand_k_spatial(r_mode='est')``, whose online
+R-hat pools statistics across chunks), with one float-level exception:
+``rand_proj_spatial(r_mode='est')`` is decode-shardable (its R-hat is
+per-chunk) but its einsum associates differently per slice width, so
+est-mode parity is numerical rather than bitwise. ``info`` gains the
+modelled ``intra_pod_bytes`` columns; at n_shards >= 2 the ownership route
+strictly reduces intra-pod traffic whenever the remote clients' payload
+bytes exceed the decoded vector's d bytes (asserted in tests + benchmarks).
 """
 from __future__ import annotations
 
@@ -58,6 +77,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import chunking
 from ..core.codec import as_pipeline
+from . import sharding as shard_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,7 +122,8 @@ def _chunk_clients(tree, d_block: int):
     return chunks, restore, n
 
 
-def _info(pipe, n: int, d_flat: int, n_chunks: int, n_total: int | None = None) -> dict:
+def _info(pipe, n: int, d_flat: int, n_chunks: int, n_total: int | None = None,
+          n_shards: int = 1, plan=None) -> dict:
     # declared ledger from the payload schema; the ledger-honesty tests pin
     # it to the actual array bytes, so declared == transmitted.
     per_client = pipe.payload_nbytes(n_chunks)
@@ -115,7 +136,83 @@ def _info(pipe, n: int, d_flat: int, n_chunks: int, n_total: int | None = None) 
         "full_bytes": d_flat * 4,  # uncompressed float32 exchange baseline
         "payload_bytes_per_client": per_client,
         "bytes_sent": per_client * n,
+        **intra_pod_traffic(pipe, n, n_chunks, n_shards, plan=plan),
     }
+
+
+def intra_pod_traffic(pipe, n: int, n_chunks: int, n_shards: int,
+                      plan=None) -> dict:
+    """Modelled server-side (intra-pod) RECEIVE bytes of one decode, summed
+    over all shards — the quantity the sharded decode exists to cut:
+
+    - ``intra_pod_bytes_allgather``: the replicated decode all-gathers every
+      remote client's full payload to every shard:
+      ``n_shards * n_remote * payload_nbytes(n_chunks)``.
+    - ``intra_pod_bytes_ownership``: the ownership route delivers each shard
+      only its owned chunk slice (``all_to_all``), then assembles decoded
+      means (d_block float32 bytes per chunk) with one ``all_gather``:
+      ``n_shards * n_remote * payload_nbytes(chunks_per_owner)
+      + n_shards * (n_shards - 1) * chunks_per_owner * d_block * 4``.
+    - ``intra_pod_bytes``: the column for the route actually taken
+      (``ownership`` when a plan is in force, else ``allgather``).
+
+    ``n_remote = n - n/n_shards`` is the clients whose payloads must cross a
+    shard boundary to reach one given shard. At ``n_shards == 1`` everything
+    is shard-local and all columns are 0. The ownership column counts the
+    PADDED slice width (what ``all_to_all`` actually moves).
+    """
+    if n_shards <= 1:
+        return {
+            "n_shards": max(1, n_shards),
+            "intra_pod_bytes_allgather": 0,
+            "intra_pod_bytes_ownership": 0,
+            "intra_pod_bytes": 0,
+        }
+    n_remote = n - n / n_shards
+    allgather = n_shards * n_remote * pipe.payload_nbytes(n_chunks)
+    eff = plan if plan is not None else shard_lib.chunk_ownership(n_chunks, n_shards)
+    cpo = eff.chunks_per_owner
+    ownership = (
+        n_shards * n_remote * pipe.payload_nbytes(cpo)
+        + n_shards * (n_shards - 1) * cpo * pipe.d_block * 4
+    )
+    return {
+        "n_shards": n_shards,
+        "intra_pod_bytes_allgather": int(round(allgather)),
+        "intra_pod_bytes_ownership": int(round(ownership)),
+        "intra_pod_bytes": int(round(ownership if plan is not None else allgather)),
+    }
+
+
+def intra_pod_reduction(info: dict) -> float | None:
+    """allgather/ownership server-side traffic ratio from an ``info`` dict
+    (``compressed_mean_tree*`` or ``intra_pod_traffic``). > 1 means the
+    sharded decode receives fewer bytes than the replicated all-gather
+    decode. None when the decode ran on a single shard (nothing crosses a
+    shard boundary either way)."""
+    own = info.get("intra_pod_bytes_ownership", 0)
+    ag = info.get("intra_pod_bytes_allgather", 0)
+    if not own or not ag:
+        return None
+    return ag / own
+
+
+def ownership_plan(ownership, n_chunks: int, n_shards: int):
+    """Normalise the ``ownership=`` argument: None/False -> no plan;
+    True -> plan over ``n_shards``; int -> plan over that many shards;
+    a ``ChunkOwnership`` -> validated pass-through."""
+    if ownership is None or ownership is False:
+        return None
+    if isinstance(ownership, shard_lib.ChunkOwnership):
+        if ownership.n_chunks != n_chunks:
+            raise ValueError(
+                f"ownership plan covers {ownership.n_chunks} chunks but the "
+                f"payload grid has {n_chunks}"
+            )
+        return ownership
+    if ownership is True:
+        return shard_lib.chunk_ownership(n_chunks, max(1, n_shards))
+    return shard_lib.chunk_ownership(n_chunks, int(ownership))
 
 
 def _participant_ids(participants, n_total: int) -> np.ndarray:
@@ -131,21 +228,81 @@ def _participant_ids(participants, n_total: int) -> np.ndarray:
 
 
 def check_streamable(pipe) -> None:
-    if not pipe.chunk_streamable:
+    """Raise unless ``pipe`` may stream the chunk axis (``overlap=True``),
+    naming the offending stage so the caller knows what to change."""
+    offender = pipe.non_streamable_stage
+    if offender is not None:
+        stage, reason = offender
         raise ValueError(
             "overlap=True needs a chunk-streamable pipeline (per-chunk "
-            "randomness independent of chunk position): the rand_k / SRHT "
-            "family with shared_randomness=True, top_k, or identity, and no "
-            f"Int8Quant stage. Got {pipe.describe()!r} — run it with "
-            "overlap=False instead."
+            "randomness independent of chunk position), but stage "
+            f"{type(stage).__name__} of {pipe.describe()!r} {reason}. "
+            "Run it with overlap=False instead."
         )
 
 
-def stream_tiles(n_chunks: int, tile: int = 1) -> list:
-    """Chunk-axis tiling for the double-buffered stream: [(lo, hi), ...]."""
+def check_shardable(pipe) -> None:
+    """Raise unless ``pipe`` may decode owner-sliced (``ownership=``),
+    naming the offending stage. Weaker than ``check_streamable``: clients
+    always encode full vectors, only the DECODE must be chunk-local."""
+    offender = pipe.non_shardable_stage
+    if offender is not None:
+        stage, reason = offender
+        raise ValueError(
+            "ownership= needs a decode-shardable pipeline (per-chunk decode "
+            "reading only its own payload rows), but stage "
+            f"{type(stage).__name__} of {pipe.describe()!r} {reason}. "
+            "Run it without ownership instead."
+        )
+
+
+def stream_tiles(n_chunks: int, tile: int = 1, ownership=None) -> list:
+    """Chunk-axis tiling for the double-buffered stream: [(lo, hi), ...].
+
+    With an ``ownership`` plan the tiling becomes OWNER-LOCAL: tiles never
+    span an owner boundary, so each tile's decode runs wholly on one owner
+    and ``overlap=`` composes with the sharded decode. Owner slices are
+    contiguous and ascending, so the tiles still cover [0, n_chunks) in
+    natural order.
+    """
     if tile < 1:
         raise ValueError(f"overlap_tile must be >= 1, got {tile}")
-    return [(lo, min(lo + tile, n_chunks)) for lo in range(0, n_chunks, tile)]
+    if ownership is None:
+        return [(lo, min(lo + tile, n_chunks)) for lo in range(0, n_chunks, tile)]
+    tiles = []
+    for s in range(ownership.n_shards):
+        lo, hi = ownership.slice_for(s)
+        tiles.extend((l0, min(l0 + tile, hi)) for l0 in range(lo, hi, tile))
+    return tiles
+
+
+def sharded_decode(pipe, key, payloads, n: int, plan, *, client_ids=None):
+    """Owner-partitioned server decode of a stacked payload (leading client
+    axis): decode each owner's chunk slice at its global offset and
+    concatenate. This is the decode the shard_map ownership path runs
+    per-owner; here the owners are iterated in one process, which makes the
+    partition testable anywhere and serves the local/gspmd backends.
+
+    Bit-identical to ``pipe.decode_payload(key, payloads, n)`` for every
+    ``decode_shardable`` pipeline: per-chunk decode reads only its own
+    payload rows, and position-keyed randomness is re-derived from the
+    GLOBAL chunk id via ``chunk_offset``. Sole float-level exception:
+    ``rand_proj_spatial(r_mode='est')`` — its per-chunk R-hat einsum
+    associates differently per slice width, so parity there is numerical
+    (allclose), not bitwise (tests/test_ownership.py pins both contracts).
+    """
+    check_shardable(pipe)
+    outs = []
+    for s in range(plan.n_shards):
+        lo, hi = plan.slice_for(s)
+        if hi <= lo:
+            continue  # fully-padded tail owner: nothing real to decode
+        sliced = jax.tree.map(lambda leaf: leaf[:, lo:hi], payloads)
+        outs.append(
+            pipe.decode_payload(key, sliced, n, client_ids=client_ids,
+                                chunk_offset=lo)
+        )
+    return jnp.concatenate(outs, axis=0)
 
 
 def _double_buffer(tiles, produce, consume) -> list:
@@ -166,7 +323,8 @@ def _double_buffer(tiles, produce, consume) -> list:
 
 
 def streamed_mean(pipe, key, x, n, *, client_ids=None, side_info=None,
-                  tile: int = 1, need_self: bool = False, constrain=None):
+                  tile: int = 1, need_self: bool = False, constrain=None,
+                  ownership=None):
     """Double-buffered chunk streaming: encode tile c+1 while tile c decodes.
 
     ``x``: (n, C, d_block) chunk array (EF residual already added by the
@@ -174,6 +332,12 @@ def streamed_mean(pipe, key, x, n, *, client_ids=None, side_info=None,
     tile's slice is subtracted before encode and added back after decode,
     exactly as ``Pipeline.encode``/``decode`` would. ``constrain`` optionally
     applies a sharding constraint to each tile's payload leaves.
+
+    ``ownership`` (a ``ChunkOwnership`` plan) makes the tile iteration
+    OWNER-LOCAL: tiles never span an owner's slice boundary and each tile is
+    decoded at its global chunk offset, so the stream is exactly the decode
+    an owner shard would run — ``overlap=`` composes with the sharded decode
+    without changing a bit (streamable pipelines are position-free).
 
     Returns (mean (C, d_block), self_dec (n, C, d_block) | None). For
     chunk-streamable pipelines (validated here) the result is BIT-identical
@@ -184,6 +348,8 @@ def streamed_mean(pipe, key, x, n, *, client_ids=None, side_info=None,
     wire.
     """
     check_streamable(pipe)
+    if ownership is not None:
+        check_shardable(pipe)
     n_chunks = x.shape[1]
     ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
 
@@ -197,7 +363,8 @@ def streamed_mean(pipe, key, x, n, *, client_ids=None, side_info=None,
 
     def consume(t, payloads):
         lo, hi = t
-        dec = pipe.decode_payload(key, payloads, n, client_ids=ids)
+        dec = pipe.decode_payload(key, payloads, n, client_ids=ids,
+                                  chunk_offset=lo)
         if side_info is not None:
             dec = dec + side_info[lo:hi]
         self_dec = None
@@ -207,7 +374,8 @@ def streamed_mean(pipe, key, x, n, *, client_ids=None, side_info=None,
             )(ids, payloads)
         return dec, self_dec
 
-    drained = _double_buffer(stream_tiles(n_chunks, tile), produce, consume)
+    drained = _double_buffer(stream_tiles(n_chunks, tile, ownership),
+                             produce, consume)
     mean = jnp.concatenate([d for d, _ in drained], axis=0)
     self_dec = (
         jnp.concatenate([s for _, s in drained], axis=1) if need_self else None
@@ -216,7 +384,8 @@ def streamed_mean(pipe, key, x, n, *, client_ids=None, side_info=None,
 
 
 def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
-                         participants=None, overlap=False, overlap_tile=1):
+                         participants=None, overlap=False, overlap_tile=1,
+                         ownership=None):
     """Cross-client compressed mean of a pytree.
 
     tree leaves: (n_clients, ...). Returns (mean_tree, info, ef_next) where
@@ -228,9 +397,24 @@ def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
     Only they encode; decode uses their actual client ids and n = how many
     actually reported. ef_next keeps the FULL (n_clients, ...) shape — rows of
     non-participants carry over unchanged.
+
+    ``ownership``: True / shard count / ``ChunkOwnership`` plan — run the
+    server decode owner-partitioned (``sharded_decode``; on this GSPMD path
+    the owners are logical, so the partition changes no numbers and no
+    traffic, but the same slices and chunk offsets as the shard_map route
+    are exercised and ``info`` reports the modelled ``intra_pod_bytes``
+    columns at the plan's shard count).
     """
     pipe = as_pipeline(spec)
     chunks, restore, n_total = _chunk_clients(tree, pipe.d_block)
+    n_chunks = chunks.shape[1]
+    mesh_shards = 1
+    if shardings is not None:
+        for a in shardings.client_axes:
+            mesh_shards *= shardings.mesh.shape[a]
+    plan = ownership_plan(ownership, n_chunks, mesh_shards)
+    if plan is not None:
+        check_shardable(pipe)
     if participants is None:
         ids = None
         part_chunks, n = chunks, n_total
@@ -250,12 +434,17 @@ def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
             pipe, key, x, n, client_ids=ids, tile=overlap_tile,
             need_self=pipe.has_ef,
             constrain=None if shardings is None else shardings.constrain_tree,
+            ownership=plan,
         )
     else:
         payloads, _ = pipe.encode_all(key, x, client_ids=ids)
         if shardings is not None:
             payloads = shardings.constrain_tree(payloads)
-        mean_chunks = pipe.decode_payload(key, payloads, n, client_ids=ids)
+        if plan is not None:
+            mean_chunks = sharded_decode(pipe, key, payloads, n, plan,
+                                         client_ids=ids)
+        else:
+            mean_chunks = pipe.decode_payload(key, payloads, n, client_ids=ids)
         self_dec = None
         if pipe.has_ef:
             id_arr = jnp.arange(n) if ids is None else jnp.asarray(ids)
@@ -272,14 +461,15 @@ def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
     d_flat = sum(
         int(np.prod(leaf.shape[1:], dtype=np.int64)) for leaf in jax.tree.leaves(tree)
     )
-    return mean_tree, _info(pipe, n, d_flat, chunks.shape[1],
-                            n_total=n_total), ef_next
+    n_shards = plan.n_shards if plan is not None else mesh_shards
+    return mean_tree, _info(pipe, n, d_flat, n_chunks, n_total=n_total,
+                            n_shards=n_shards, plan=plan), ef_next
 
 
 def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
                                   client_axes=("pod",), ef_chunks=None,
                                   participants=None, overlap=False,
-                                  overlap_tile=1):
+                                  overlap_tile=1, ownership=None):
     """Explicit-collective compressed mean via shard_map.
 
     grads leaves: (n_clients, ...) with the client axis sharded over
@@ -300,6 +490,20 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
     participants' payloads enter the decode (static gather on the replicated
     payload stack, with their actual client ids) and only their residual rows
     update.
+
+    ``ownership`` (True / ``ChunkOwnership``; docs/DESIGN.md §10): the
+    sharded server decode. Instead of all-gathering every payload to every
+    shard, an ``all_to_all`` over the client axes routes each chunk's
+    payloads ONLY to its owner shard (reduce-scatter-style: the payload
+    chunk axis is split, the client axis concatenated), the owner decodes
+    its slice at its global chunk offset, and the decoded means — d_block
+    float32 bytes per chunk, not n*k payload bytes — are assembled with one
+    ``all_gather``. Bit-identical to the unsharded decode (asserted in
+    tests/test_ownership.py, incl. participants, heterogeneous budgets and
+    EF; ``rand_proj_spatial(r_mode='est')`` is the one float-level-only
+    case — see ``sharded_decode``); EF residuals still never cross the wire
+    (self-decode runs on the client's own shard from its pre-routing
+    payloads).
     """
     from jax.experimental.shard_map import shard_map
 
@@ -313,7 +517,7 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
         return compressed_mean_tree(
             pipe, key, grads, dme_shardings(mesh, client_axes),
             ef_chunks=ef_chunks, participants=participants,
-            overlap=overlap, overlap_tile=overlap_tile,
+            overlap=overlap, overlap_tile=overlap_tile, ownership=ownership,
         )
     if overlap:
         check_streamable(pipe)
@@ -332,6 +536,14 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
         int(np.prod(leaf.shape[1:], dtype=np.int64)) for leaf in jax.tree.leaves(grads)
     )
     n_chunks = chunking.num_chunks(d_flat, pipe.d_block)
+    plan = ownership_plan(ownership, n_chunks, n_shards)
+    if plan is not None:
+        if plan.n_shards != n_shards:
+            raise ValueError(
+                f"ownership plan has {plan.n_shards} owners but the mesh "
+                f"client axes {client_axes} hold {n_shards} shards"
+            )
+        check_shardable(pipe)
     if pipe.has_ef and ef_chunks is None:
         ef_chunks = jnp.zeros((n, n_chunks, pipe.d_block), jnp.float32)
     use_ef = pipe.has_ef
@@ -346,10 +558,13 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
         )(jnp.arange(n_local))
         x = chunks + ef_local if use_ef else chunks
 
-        def encode_and_gather(x_tile):
-            payloads = jax.vmap(
+        def encode_local(x_cols):
+            return jax.vmap(
                 lambda i, c: pipe.encode_payload(key, i, c)
-            )(ids, x_tile)
+            )(ids, x_cols)
+
+        def encode_and_gather(x_tile):
+            payloads = encode_local(x_tile)
             gathered = jax.tree.map(
                 lambda leaf: jax.lax.all_gather(
                     leaf, client_axes, axis=0, tiled=True
@@ -357,6 +572,28 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
                 payloads,
             )
             return payloads, gathered
+
+        def route_to_owners(payloads):
+            """The reduce-scatter-style payload routing: split the chunk axis
+            across the client axes, concatenate the client axis — this shard
+            receives ONLY the slice it owns, from every client."""
+            return jax.tree.map(
+                lambda leaf: jax.lax.all_to_all(
+                    leaf, client_axes, split_axis=1, concat_axis=0, tiled=True
+                ),
+                payloads,
+            )
+
+        def decode_owned(routed, owner_lo):
+            """This shard's server decode of its owned slice, at its global
+            chunk offset (position-keyed codecs re-derive the full decode's
+            randomness from it)."""
+            if part_ids is None:
+                return pipe.decode_payload(key, routed, n, chunk_offset=owner_lo)
+            selected = jax.tree.map(lambda leaf: leaf[part_ids], routed)
+            return pipe.decode_payload(key, selected, n_eff,
+                                       client_ids=part_ids,
+                                       chunk_offset=owner_lo)
 
         def decode_gathered(gathered):
             if part_ids is None:
@@ -369,7 +606,66 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
                 lambda i, p: pipe.self_decode(key, i, p)
             )(ids, payloads)
 
-        if not overlap:
+        def pad_chunk_axis(tree_like, pad):
+            if pad == 0:
+                return tree_like
+            return jax.tree.map(
+                lambda leaf: jnp.pad(
+                    leaf, [(0, 0), (0, pad)] + [(0, 0)] * (leaf.ndim - 2)
+                ),
+                tree_like,
+            )
+
+        def assemble(mean_own):
+            """(chunks_per_owner, d_block) decoded slice -> replicated
+            (n_chunks, d_block): ONE all_gather of d-sized means — the only
+            post-routing cross-shard traffic."""
+            full = jax.lax.all_gather(mean_own, client_axes, axis=0, tiled=True)
+            return full[:n_chunks]
+
+        if plan is not None:
+            cpo = plan.chunks_per_owner
+            owner_lo = shard_idx * cpo
+            if not overlap:
+                payloads = encode_local(x)
+                routed = route_to_owners(pad_chunk_axis(payloads, plan.pad))
+                mean_chunks = assemble(decode_owned(routed, owner_lo))
+                if not use_ef:
+                    return restore(mean_chunks), ef_local
+                self_dec = local_self_dec(payloads)
+            else:
+                # owner-local tile streaming: tile t covers positions
+                # [lo, hi) of EVERY owner's slice at once, so the per-tile
+                # all_to_all is the in-flight payload and each owner decodes
+                # its sub-tile while the next tile encodes.
+                x_pad = jnp.pad(x, ((0, 0), (0, plan.pad), (0, 0)))
+                tile_cols = [
+                    np.concatenate(
+                        [s * cpo + np.arange(lo, hi) for s in range(n_shards)]
+                    )
+                    for lo, hi in stream_tiles(cpo, overlap_tile)
+                ]
+
+                def produce(cols):
+                    payloads = encode_local(x_pad[:, cols])
+                    return payloads, route_to_owners(payloads)
+
+                def consume(cols, e):
+                    dec = decode_owned(e[1], owner_lo + cols[0])
+                    return dec, local_self_dec(e[0]) if use_ef else None
+
+                drained = _double_buffer(tile_cols, produce, consume)
+                mean_chunks = assemble(
+                    jnp.concatenate([m for m, _ in drained], axis=0)
+                )
+                if not use_ef:
+                    return restore(mean_chunks), ef_local
+                # tiles saw owner-major column order: invert the (static)
+                # permutation to put the self-decodes back in natural order
+                col_order = np.concatenate(tile_cols)
+                self_cat = jnp.concatenate([s for _, s in drained], axis=1)
+                self_dec = self_cat[:, np.argsort(col_order)][:, :n_chunks]
+        elif not overlap:
             payloads, gathered = encode_and_gather(x)
             mean_chunks = decode_gathered(gathered)
             if not use_ef:
@@ -411,4 +707,5 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
     if not use_ef:
         ef_next = None
 
-    return mean_tree, _info(pipe, n_eff, d_flat, n_chunks, n_total=n), ef_next
+    return mean_tree, _info(pipe, n_eff, d_flat, n_chunks, n_total=n,
+                            n_shards=n_shards, plan=plan), ef_next

@@ -44,6 +44,14 @@ Overlapped decode (``RoundConfig(overlap=True)``): steps 3-5 stream the
 chunk axis through ``dist.collectives``'s double buffer (encode of chunk
 c+1 while chunk c's payload is in flight), bit-identical to the synchronous
 path on every backend; requires a stateless, chunk-streamable pipeline.
+
+Sharded server decode (``RoundConfig(ownership=True)``, docs/DESIGN.md §10):
+step 5 runs owner-partitioned — each owner shard decodes only the chunk
+slice it owns (payloads routed by an ``all_to_all`` on the shard_map
+backend; the same slices/offsets iterated in-process on local/gspmd), and
+``History.intra_pod_bytes`` ledgers the modelled server-side receive
+traffic, which the ownership route strictly reduces at n_owners >= 2
+whenever remote payload bytes exceed the decoded vector's d bytes.
 """
 from __future__ import annotations
 
@@ -77,6 +85,11 @@ class RoundConfig:
     stale_weight: float = 1.0   # per-client weight of an admitted stale payload
     overlap: bool = False       # double-buffered chunk streaming in the decode
     overlap_tile: int = 1       # chunks per stream tile
+    ownership: bool = False     # sharded server decode (chunk ownership, §10)
+    # logical owner shards on local/gspmd (0 = derive from the mesh); the
+    # shard_map backend always uses the mesh client-axes extent (the
+    # all_to_all routing must match the physical shards)
+    n_owners: int = 0
 
 
 @dataclasses.dataclass
@@ -111,12 +124,20 @@ class History:
     # late-ARRIVAL bytes (subset of ``bytes``): every late payload that lands
     # is ledgered, admitted into the decode or superseded by a fresh report
     stale_bytes: list = dataclasses.field(default_factory=list)
+    # modelled server-side receive traffic of the round's decode, summed over
+    # shards (dist.collectives.intra_pod_traffic): the column the sharded
+    # decode (RoundConfig.ownership) must strictly reduce at n_shards >= 2
+    intra_pod_bytes: list = dataclasses.field(default_factory=list)
     rho_hat: list = dataclasses.field(default_factory=list)  # tracker output (or nan)
     client_state: Any = None  # final stacked ClientState (None if stateless)
 
     @property
     def total_bytes(self) -> int:
         return int(np.sum(self.bytes))
+
+    @property
+    def total_intra_pod_bytes(self) -> int:
+        return int(np.sum(self.intra_pod_bytes)) if self.intra_pod_bytes else 0
 
     @property
     def total_stale_bytes(self) -> int:
@@ -142,17 +163,21 @@ def _scatter_rows(full, rows, ids_j):
 
 
 def _group_local(pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate,
-                 overlap=False, overlap_tile=1):
+                 overlap=False, overlap_tile=1, plan=None):
     """One budget group on the local backend. Returns (group mean, updated
     full ClientState, stacked payloads for the tracker — None on the
-    overlapped path, which never materialises the whole payload stack)."""
+    overlapped path, which never materialises the whole payload stack).
+
+    ``plan`` (ChunkOwnership): run the server decode owner-partitioned —
+    the same slices/offsets as the shard_map ownership route, so the local
+    backend exercises (and bit-matches) the sharded decode."""
     ids_j = jnp.asarray(ids_g)
     if overlap:
         # stateless by construction (run_rounds validates): stream the chunk
         # axis through the dist layer's double buffer — bit-identical
         dec, _ = collectives.streamed_mean(
             pipe_g, key, xs_chunks[ids_g], len(ids_g), client_ids=ids_j,
-            side_info=side, tile=overlap_tile,
+            side_info=side, tile=overlap_tile, ownership=plan,
         )
         return dec, cstate, None
     st_g = None
@@ -168,14 +193,36 @@ def _group_local(pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate,
         # per-client temporal: the server adds back the SURVIVORS' mean
         # memory (its mirror of the clients' side information)
         dec_side = jnp.mean(mem_snapshot[ids_j], axis=0)
-    dec = pipe_g.decode(
-        key, payloads, len(ids_g), client_ids=ids_j, side_info=dec_side
-    )
+    if plan is not None:
+        dec = collectives.sharded_decode(
+            pipe_g, key, payloads, len(ids_g), plan, client_ids=ids_j
+        )
+        if dec_side is not None:
+            dec = dec + dec_side
+    else:
+        dec = pipe_g.decode(
+            key, payloads, len(ids_g), client_ids=ids_j, side_info=dec_side
+        )
     return dec, cstate, payloads
 
 
+def _ownership_arg(cfg):
+    """The ``ownership=`` value forwarded to dist.collectives. On shard_map
+    the MESH defines the owners (the all_to_all routing must match the
+    physical shards, so ``n_owners`` is ignored there); on local/gspmd an
+    explicit ``n_owners`` sets the logical owner count, else the plan derives
+    from the mesh client axes."""
+    if not cfg.ownership:
+        return None
+    if cfg.backend == "shard_map":
+        return True
+    return cfg.n_owners if cfg.n_owners else True
+
+
 def _group_dist(pipe_g, key, xs_chunks, ids_g, side, cstate, cfg):
-    """One budget group through dist.collectives (gspmd / shard_map)."""
+    """One budget group through dist.collectives (gspmd / shard_map).
+
+    Returns (group mean, updated state, bytes, intra-pod bytes, delta)."""
     delta = xs_chunks if side is None else xs_chunks - side[None]
     tree = {"x": delta}
     ef_arr = cstate.ef if (cstate is not None and pipe_g.has_ef) else None
@@ -186,19 +233,21 @@ def _group_dist(pipe_g, key, xs_chunks, ids_g, side, cstate, cfg):
             pipe_g, key, tree, cfg.mesh, client_axes=cfg.client_axes,
             participants=ids_g, ef_chunks=ef_arr,
             overlap=cfg.overlap, overlap_tile=cfg.overlap_tile,
+            ownership=_ownership_arg(cfg),
         )
     else:
         shardings = collectives.dme_shardings(cfg.mesh, cfg.client_axes)
         mean_tree, info, ef_next = collectives.compressed_mean_tree(
             pipe_g, key, tree, shardings, participants=ids_g, ef_chunks=ef_arr,
             overlap=cfg.overlap, overlap_tile=cfg.overlap_tile,
+            ownership=_ownership_arg(cfg),
         )
     if ef_next is not None:
         cstate = ClientState(ef=ef_next, memory=cstate.memory)
     mean_g = mean_tree["x"]
     if side is not None:
         mean_g = mean_g + side
-    return mean_g, cstate, info["bytes_sent"], delta
+    return mean_g, cstate, info["bytes_sent"], info["intra_pod_bytes"], delta
 
 
 def _measure_rho_dist(pipe_g, key, delta, ids_g, cstate):
@@ -231,13 +280,18 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate,
                   side, mem_snapshot):
     """Budget-grouped encode/decode over the survivors on any backend.
 
-    Returns (mean_chunks, bytes_sent, rho_round, cstate)."""
+    Returns (mean_chunks, bytes_sent, intra_pod, rho_round, cstate)."""
     groups = cohort.budget_groups(part.survivors, pipe.k)
     track = _should_track(pipe, cfg)
     n_eff = part.n_survivors
     n_chunks = xs_chunks.shape[1]
+    plan = None
+    if cfg.ownership and cfg.backend == "local":
+        plan = collectives.ownership_plan(
+            _ownership_arg(cfg), n_chunks, max(1, cfg.n_owners)
+        )
 
-    mean_chunks, bytes_sent, rho_parts = None, 0, []
+    mean_chunks, bytes_sent, intra_pod, rho_parts = None, 0, 0, []
     for k_g, ids_g in groups:
         if len(ids_g) == 0:
             continue
@@ -248,9 +302,13 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate,
         if cfg.backend == "local":
             dec, cstate, payloads = _group_local(
                 pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate,
-                overlap=cfg.overlap, overlap_tile=cfg.overlap_tile,
+                overlap=cfg.overlap, overlap_tile=cfg.overlap_tile, plan=plan,
             )
             bytes_sent += pipe_g.payload_nbytes(n_chunks) * len(ids_g)
+            intra_pod += collectives.intra_pod_traffic(
+                pipe_g, len(ids_g), n_chunks,
+                plan.n_shards if plan is not None else 1, plan=plan,
+            )["intra_pod_bytes"]
             if not track:
                 rho_g = None
             elif payloads is not None:
@@ -259,10 +317,11 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate,
                 delta = xs_chunks if side is None else xs_chunks - side[None]
                 rho_g = _measure_rho_dist(pipe_g, key, delta, ids_g, pre_state)
         elif cfg.backend in ("gspmd", "shard_map"):
-            dec, cstate, nbytes_g, delta = _group_dist(
+            dec, cstate, nbytes_g, intra_g, delta = _group_dist(
                 pipe_g, key, xs_chunks, ids_g, side, cstate, cfg
             )
             bytes_sent += nbytes_g
+            intra_pod += intra_g
             rho_g = (
                 _measure_rho_dist(pipe_g, key, delta, ids_g, pre_state)
                 if track else None
@@ -281,7 +340,7 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate,
         wsum = sum(w for _, w in rho_parts)
         rho_round = sum(r * w for r, w in rho_parts) / wsum
         server_lib.ema_update(state_srv, rho_round, gamma=cfg.r_gamma)
-    return mean_chunks, bytes_sent, rho_round, cstate
+    return mean_chunks, bytes_sent, intra_pod, rho_round, cstate
 
 
 def _stale_arrival_bytes(pipe, buf: _StaleBuffer, cohort, n_chunks: int) -> int:
@@ -380,6 +439,13 @@ def _validate_cfg(pipe, cfg):
                 "need the whole payload before the next round encodes)"
             )
         collectives.check_streamable(pipe)
+    if cfg.ownership:
+        # per-client temporal composes: the mean-memory add-back is
+        # position-wise (each owner adds its slice) and the memory update
+        # runs client-local from full payloads, exactly as without ownership
+        collectives.check_shardable(pipe)
+        if cfg.n_owners < 0:
+            raise ValueError(f"n_owners must be >= 0, got {cfg.n_owners}")
 
 
 def run_rounds(task: Task, spec, cohort: Cohort | None = None,
@@ -426,7 +492,7 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
         xs_chunks = jax.vmap(lambda v: chunking.chunk(v, pipe.d_block))(vecs)
         side, mem_snapshot = _side_and_memory(pipe, cfg, state_srv, cstate)
 
-        mean_chunks, nbytes, rho_round, cstate = _decode_round(
+        mean_chunks, nbytes, intra_pod, rho_round, cstate = _decode_round(
             pipe, rkey, xs_chunks, part, cohort, state_srv, cfg, cstate,
             side, mem_snapshot,
         )
@@ -480,6 +546,7 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
         hist.n_sampled.append(part.n_sampled)
         hist.n_stale.append(n_stale)
         hist.stale_bytes.append(int(stale_nbytes))
+        hist.intra_pod_bytes.append(int(intra_pod))
         hist.rho_hat.append(float("nan") if rho_round is None else rho_round)
 
         server_lib.commit_round(state_srv, mean_chunks)

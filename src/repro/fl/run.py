@@ -79,6 +79,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="double-buffered chunk streaming: encode chunk c+1 "
                          "while chunk c's payload is in flight (bit-identical "
                          "to the sync decode)")
+    ap.add_argument("--ownership", action="store_true",
+                    help="sharded server decode: each owner shard receives "
+                         "and decodes only the chunk slice it owns, then "
+                         "decoded means are assembled (bit-identical; cuts "
+                         "intra-pod traffic at >= 2 owners)")
+    ap.add_argument("--owners", type=int, default=0,
+                    help="owner shards for --ownership; 0 derives from the "
+                         "mesh client axes (1 on plain CPU)")
     ap.add_argument("--temporal", action="store_true",
                     help="decode deltas against the server's previous estimate")
     ap.add_argument("--client-temporal", action="store_true",
@@ -150,6 +158,8 @@ def run_one(task, args, name, est_kw):
         staleness=getattr(args, "staleness", 1),
         stale_weight=getattr(args, "stale_weight", 1.0),
         overlap=getattr(args, "overlap", False),
+        ownership=getattr(args, "ownership", False),
+        n_owners=getattr(args, "owners", 0),
     )
     state, hist = rounds_lib.run_rounds(task, spec, cohort, cfg)
     return spec, state, hist

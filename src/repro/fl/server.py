@@ -36,6 +36,17 @@ legitimately sees (payloads and its own decode history):
    the fresh survivors' mean by client count. The admission decode itself
    runs in ``fl.rounds`` (with the stale group's own round key and side
    information); the combine is the server-side policy knob.
+
+5. **Sharded-decode accounting** (``RoundConfig(ownership=True)``,
+   docs/DESIGN.md §10) — ``intra_pod_reduction`` reads the all-gather vs
+   chunk-ownership server-side traffic ratio off a ``dist.collectives``
+   info dict; ``fl.rounds`` ledgers the per-round column in
+   ``History.intra_pod_bytes``. The ownership decode composes transparently
+   with everything here: ``resolve_pipeline`` rewrites the sparsifier BEFORE
+   the decode is partitioned, the correlation tracker re-derives payloads
+   from full client vectors (never from an owner's slice), and the stale
+   decode is a whole-vector server-side op whatever routes the fresh
+   traffic.
 """
 from __future__ import annotations
 
@@ -148,6 +159,16 @@ def admit_stale(fresh_mean, n_fresh: int, stale_mean, n_stale: int,
     """
     w = stale_weight * n_stale
     return (n_fresh * fresh_mean + w * stale_mean) / (n_fresh + w)
+
+
+def intra_pod_reduction(info: dict) -> float | None:
+    """allgather/ownership server-side traffic ratio of a decode — the
+    server-policy view of ``dist.collectives.intra_pod_reduction`` (one
+    implementation; re-exported here because the FL server is where the
+    ratio becomes a reporting/policy quantity)."""
+    from ..dist import collectives
+
+    return collectives.intra_pod_reduction(info)
 
 
 def commit_round(state: ServerState, mean_chunks) -> None:

@@ -62,6 +62,9 @@ def main(argv=None):
     ap.add_argument("--d-block", type=int, default=1024)
     ap.add_argument("--transform", default="avg")
     ap.add_argument("--ef", action="store_true", help="error feedback (top_k/wangni)")
+    ap.add_argument("--dme-ownership", type=int, default=0,
+                    help="owner shards for the sharded server decode "
+                         "(docs/DESIGN.md §10); 0 = replicated decode")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--non-iid", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
@@ -84,7 +87,8 @@ def main(argv=None):
 
     def make_step(n_clients):
         spec = dme
-        step = make_train_step(cfg, optimizer, dme_spec=spec if n_clients else None)
+        step = make_train_step(cfg, optimizer, dme_spec=spec if n_clients else None,
+                               dme_ownership=args.dme_ownership)
         return jax.jit(step, donate_argnums=(0, 1))
 
     def make_data(n_clients):

@@ -50,16 +50,26 @@ def init_train_state(cfg, optimizer, params, dme_spec=None, n_clients: int = 0):
 
 def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
                     client_axes=("pod",), seed: int = 0, dme_impl: str = "auto",
-                    dme_overlap: bool = False, dme_overlap_tile: int = 1):
+                    dme_overlap: bool = False, dme_overlap_tile: int = 1,
+                    dme_ownership=False):
     """``dme_overlap=True`` streams the gradient's chunk axis through the
     collectives' double buffer (encode chunk c+1 while chunk c's payload is
     in flight) — bit-identical to the synchronous exchange, so it composes
-    with EF and both impls; requires a chunk-streamable pipeline."""
+    with EF and both impls; requires a chunk-streamable pipeline.
+
+    ``dme_ownership`` (True / owner count / ``dist.sharding.ChunkOwnership``)
+    runs the server decode owner-partitioned (docs/DESIGN.md §10): on the
+    shard_map impl each mesh shard receives and decodes only the gradient
+    chunks it owns (all_to_all payload routing + one all_gather of decoded
+    means) instead of materialising every client's payload; bit-identical to
+    the replicated decode, composes with EF and ``dme_overlap``."""
     base_key = jax.random.key(seed)
     if dme_spec is not None:
         dme_spec = as_pipeline(dme_spec)
         if dme_overlap:
             collectives.check_streamable(dme_spec)
+        if dme_ownership:
+            collectives.check_shardable(dme_spec)
 
     if dme_spec is None:
 
@@ -98,11 +108,13 @@ def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
                 dme_spec, key, grads, mesh, param_pspecs, client_axes,
                 ef_chunks=state.get("ef"),
                 overlap=dme_overlap, overlap_tile=dme_overlap_tile,
+                ownership=dme_ownership or None,
             )
         else:
             grad_mean, info, new_ef = collectives.compressed_mean_tree(
                 dme_spec, key, grads, shardings, ef_chunks=state.get("ef"),
                 overlap=dme_overlap, overlap_tile=dme_overlap_tile,
+                ownership=dme_ownership or None,
             )
         params, opt, om = optimizer.update(grad_mean, state["opt"], params)
         new_state = {"opt": opt}
@@ -114,6 +126,10 @@ def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
             **om,
             "compression_ratio": info["full_bytes"] / max(info["payload_bytes_per_client"], 1),
         }
+        if dme_ownership:
+            reduction = collectives.intra_pod_reduction(info)
+            if reduction is not None:
+                out["intra_pod_reduction"] = reduction
         return params, new_state, out
 
     return dme_step

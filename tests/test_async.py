@@ -92,6 +92,52 @@ def test_overlap_parity_shardmap(rng_key, np_rng):
     assert i0 == i1
 
 
+def test_overlap_edge_tiles_ragged_and_oversized(rng_key, np_rng):
+    """Edge-tile coverage: the 7-chunk grid under a tile that does NOT
+    divide it (ragged final tile), a tile larger than the whole grid, and a
+    tile equal to it — all bit-identical to the sync decode."""
+    tree = _tree(np_rng)
+    pipe = codec.as_pipeline(codec.RandProjSpatial(k=K, d_block=D))
+    m0, i0, _ = collectives.compressed_mean_tree(pipe, rng_key, tree)
+    n_chunks = i0["n_chunks"]
+    assert n_chunks == 7  # the fixture's d_flat=833 over d_block=128
+    for tile in (2, 4, 6, n_chunks, n_chunks + 5, 64):
+        m1, i1, _ = collectives.compressed_mean_tree(
+            pipe, rng_key, tree, overlap=True, overlap_tile=tile)
+        _assert_trees_equal(m0, m1)
+        assert i0 == i1
+    # tile geometry itself: ragged final tile and single oversized tile
+    assert collectives.stream_tiles(7, 4) == [(0, 4), (4, 7)]
+    assert collectives.stream_tiles(7, 64) == [(0, 7)]
+    with pytest.raises(ValueError, match="overlap_tile"):
+        collectives.stream_tiles(7, 0)
+
+
+def test_overlap_edge_tiles_under_ownership(rng_key, np_rng):
+    """Ragged tiles x ragged ownership: tiles are owner-local (never span an
+    owner boundary) and still reproduce the sync decode bit-for-bit,
+    including with error feedback riding along."""
+    from repro.dist.sharding import chunk_ownership
+
+    tree = _tree(np_rng)
+    plan = chunk_ownership(7, 3)  # slices (0,3) (3,6) (6,7): ragged tail
+    assert collectives.stream_tiles(7, 2, plan) == [
+        (0, 2), (2, 3), (3, 5), (5, 6), (6, 7)]
+    assert collectives.stream_tiles(7, 64, plan) == [(0, 3), (3, 6), (6, 7)]
+    for spec in (codec.RandProjSpatial(k=K, d_block=D),
+                 codec.Pipeline([codec.RandK(k=K, d_block=D),
+                                 codec.ErrorFeedback()])):
+        pipe = codec.as_pipeline(spec)
+        m0, _, e0 = collectives.compressed_mean_tree(pipe, rng_key, tree)
+        for tile in (2, 3, 64):
+            m1, _, e1 = collectives.compressed_mean_tree(
+                pipe, rng_key, tree, ownership=plan, overlap=True,
+                overlap_tile=tile)
+            _assert_trees_equal(m0, m1)
+            if e0 is not None:
+                np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+
+
 NON_STREAMABLE = [
     codec.Pipeline([codec.RandK(k=K, d_block=D), codec.Int8Quant()]),
     codec.RandK(k=K, d_block=D, shared_randomness=False),
@@ -107,6 +153,28 @@ def test_overlap_rejects_non_streamable(spec, rng_key, np_rng):
     with pytest.raises(ValueError, match="chunk-streamable"):
         collectives.compressed_mean_tree(spec, rng_key, _tree(np_rng),
                                          overlap=True)
+
+
+@pytest.mark.parametrize("spec,offender", [
+    (codec.Pipeline([codec.RandK(k=K, d_block=D), codec.Int8Quant()]),
+     "Int8Quant"),
+    (codec.RandK(k=K, d_block=D, shared_randomness=False), "RandK"),
+    (codec.Wangni(k=K, d_block=D), "Wangni"),
+    (codec.Induced(k=K, d_block=D), "Induced"),
+])
+def test_check_streamable_names_offending_stage(spec, offender):
+    """The rejection must NAME the stage class that breaks streamability and
+    say why, not just reject generically."""
+    pipe = codec.as_pipeline(spec)
+    with pytest.raises(ValueError) as ei:
+        collectives.check_streamable(pipe)
+    msg = str(ei.value)
+    assert offender in msg, msg
+    assert "overlap=False" in msg  # tells the caller the way out
+    if offender == "Int8Quant":
+        assert "rounding noise" in msg
+    else:
+        assert "position" in msg
 
 
 @pytest.mark.parametrize("backend", ["local", "gspmd", "shard_map"])

@@ -1,0 +1,261 @@
+"""Seeded randomized property sweeps (no third-party property-test dep).
+
+Three invariant families, each swept over parametrized grids (>= 200 cases
+total) with deterministic per-case seeds, and each run BOTH through the
+monolithic decode and the new chunk-ownership sharded decode
+(docs/DESIGN.md §10) — the ownership path must preserve every invariant:
+
+(a) **Unbiasedness** — E[decode] ≈ true mean for every registered unbiased
+    sparsifier x quantizer pipeline (top_k is biased by construction and
+    pairs with ErrorFeedback instead; bf16's deterministic rounding gets a
+    rounding-sized slack on top of the Monte-Carlo tolerance).
+(b) **Lemma 4.1-style variance ordering** — at rho -> 1,
+    MSE(rand_proj_spatial) <= MSE(rand_k_spatial) <= MSE(rand_k): the
+    correlation-aware decoders strictly pay off where correlation exists.
+(c) **Ledger honesty** — under RANDOM budgets and participant sets, the
+    declared byte ledger equals the actual array bytes, ``bytes_sent``
+    charges exactly the survivors, and the intra-pod columns are
+    internally consistent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codec
+from repro.dist import collectives
+from repro.dist.sharding import chunk_ownership
+
+D = 64
+C = 2
+N = 6
+K = 8
+
+# (name, sparsifier ctor) — the unbiased family (top_k excluded: biased)
+UNBIASED_SPARSIFIERS = [
+    ("rand_k", lambda: codec.RandK(k=K, d_block=D)),
+    ("rand_k_spatial", lambda: codec.RandKSpatial(k=K, d_block=D,
+                                                  transform="avg")),
+    ("rand_proj_spatial", lambda: codec.RandProjSpatial(k=K, d_block=D,
+                                                        transform="avg")),
+    ("wangni", lambda: codec.Wangni(k=K, d_block=D)),
+    ("induced", lambda: codec.Induced(k=K, d_block=D)),
+    ("identity", lambda: codec.Identity(d_block=D)),
+]
+
+QUANTIZERS = [
+    ("none", None),
+    ("bf16", codec.Bf16Quant),
+    ("int8", codec.Int8Quant),
+]
+
+
+def _pipeline(sp_ctor, q_ctor):
+    stages = [sp_ctor()]
+    if q_ctor is not None:
+        stages.append(q_ctor())
+    return codec.Pipeline(stages)
+
+
+def _clients(seed, n=N, c=C, d=D, rho=None):
+    """(n, c, d) client chunks; ``rho`` close to 1 => near-identical rows."""
+    rng = np.random.default_rng(seed)
+    if rho is None:
+        xs = rng.standard_normal((n, c, d))
+    else:
+        base = rng.standard_normal((c, d))
+        noise = rng.standard_normal((n, c, d))
+        xs = rho * base[None] + np.sqrt(max(0.0, 1 - rho**2)) * noise
+    xs = xs / np.linalg.norm(xs, axis=-1, keepdims=True)
+    return jnp.asarray(xs, jnp.float32)
+
+
+def _mc_estimates(pipe, xs, plan, trials, seed):
+    """(trials, C, d) decodes under independent round keys; the decode runs
+    owner-partitioned when ``plan`` is given."""
+    n = xs.shape[0]
+
+    @jax.jit
+    def one(key):
+        payloads, _ = pipe.encode_all(key, xs)
+        if plan is None:
+            return pipe.decode_payload(key, payloads, n)
+        return collectives.sharded_decode(pipe, key, payloads, n, plan)
+
+    keys = jax.random.split(jax.random.key(seed), trials)
+    return np.asarray(jax.lax.map(one, keys))
+
+
+# ------------------------------------------------------------ (a) unbiasedness
+
+
+@pytest.mark.parametrize("ownership", [False, True],
+                         ids=["monolithic", "ownership"])
+@pytest.mark.parametrize("q_name,q_ctor", QUANTIZERS, ids=[q for q, _ in QUANTIZERS])
+@pytest.mark.parametrize("sp_name,sp_ctor", UNBIASED_SPARSIFIERS,
+                         ids=[s for s, _ in UNBIASED_SPARSIFIERS])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_unbiasedness_sparsifier_x_quantizer(sp_name, sp_ctor, q_name, q_ctor,
+                                             seed, ownership):
+    """E[decode] ≈ mean for every unbiased sparsifier x quantizer pipeline,
+    monolithic AND owner-partitioned (72 cases)."""
+    pipe = _pipeline(sp_ctor, q_ctor)
+    xs = _clients(seed)
+    plan = chunk_ownership(C, 2) if ownership else None
+    xhs = _mc_estimates(pipe, xs, plan, trials=160, seed=100 + seed)
+    xbar = np.asarray(jnp.mean(xs, axis=0))
+    err = np.abs(xhs.mean(0) - xbar)
+    sem = xhs.std(0) / np.sqrt(xhs.shape[0]) + 1e-4
+    # bf16 rounding is deterministic (not unbiased): allow its rounding size
+    slack = 8e-3 if q_name == "bf16" else 5e-3
+    assert (err < 6 * sem + slack).all(), (pipe.describe(), float(err.max()))
+
+
+def test_top_k_is_biased_hence_excluded():
+    """The counter-property: top_k's E[decode] != mean (that is WHY it pairs
+    with ErrorFeedback and sits outside the unbiased sweep)."""
+    pipe = codec.as_pipeline(codec.TopK(k=4, d_block=D))
+    xs = _clients(3)
+    xhs = _mc_estimates(pipe, xs, None, trials=160, seed=3)
+    xbar = np.asarray(jnp.mean(xs, axis=0))
+    err = np.abs(xhs.mean(0) - xbar)
+    sem = xhs.std(0) / np.sqrt(xhs.shape[0]) + 1e-4
+    assert (err > 6 * sem + 5e-3).any()
+
+
+# ------------------------------------------- (b) variance ordering at rho -> 1
+
+
+@pytest.mark.parametrize("ownership", [False, True],
+                         ids=["monolithic", "ownership"])
+@pytest.mark.parametrize("n", [4, 8])
+@pytest.mark.parametrize("k", [4, 8])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_lemma_41_variance_ordering_high_rho(n, k, seed, ownership):
+    """At rho -> 1 the paper's ordering holds (24 cases):
+
+        MSE(rand_proj_spatial) <= MSE(rand_k_spatial) <= MSE(rand_k)
+
+    and survives the owner-partitioned decode unchanged."""
+    xs = _clients(seed, n=n, c=1, rho=0.995)
+    plan = chunk_ownership(1, 2) if ownership else None
+    xbar = np.asarray(jnp.mean(xs, axis=0))
+
+    def mc_mse(spec):
+        pipe = codec.as_pipeline(spec)
+        xhs = _mc_estimates(pipe, xs, plan, trials=150, seed=200 + seed)
+        return float(np.mean(np.sum((xhs - xbar[None]) ** 2, axis=(1, 2))))
+
+    mse_rk = mc_mse(codec.RandK(k=k, d_block=D))
+    mse_rks = mc_mse(codec.RandKSpatial(k=k, d_block=D, transform="avg"))
+    mse_rps = mc_mse(codec.RandProjSpatial(k=k, d_block=D, transform="avg"))
+    # small MC slack; the expected gaps are factors, not percents
+    assert mse_rps <= mse_rks * 1.05, (mse_rps, mse_rks)
+    assert mse_rks <= mse_rk * 1.05, (mse_rks, mse_rk)
+    assert mse_rps < mse_rk * 0.9, (mse_rps, mse_rk)
+
+
+# ------------------------------------------------------------ (c) ledger honesty
+
+
+LEDGER_SPARSIFIERS = ["rand_k", "rand_k_spatial", "top_k", "wangni",
+                      "induced", "identity"]
+
+
+@pytest.mark.parametrize("ownership", [False, True],
+                         ids=["monolithic", "ownership"])
+@pytest.mark.parametrize("seed", range(60))
+def test_ledger_honesty_random_budgets_participants(seed, ownership):
+    """120 randomized cases: random sparsifier/quantizer/budget/participant
+    draws; the declared schema must equal the actual payload bytes, the
+    collectives ledger must charge exactly the survivors, and the intra-pod
+    columns must be internally consistent."""
+    rng = np.random.default_rng(seed)
+    name = LEDGER_SPARSIFIERS[rng.integers(len(LEDGER_SPARSIFIERS))]
+    d_block = int(rng.choice([32, 64, 128]))
+    # wangni's fixed-capacity packing needs capacity_slots <= d_block
+    k_hi = d_block // 2 if name == "wangni" else d_block
+    k = int(rng.integers(1, k_hi + 1))
+    q_name, q_ctor = QUANTIZERS[rng.integers(len(QUANTIZERS))]
+    kw = {"transform": "avg"} if name == "rand_k_spatial" else {}
+    if name == "identity":
+        stages = [codec.Identity(d_block=d_block)]
+    else:
+        stages = [codec.SPARSIFIERS[name](k=k, d_block=d_block, **kw)]
+    if q_ctor is not None:
+        stages.append(q_ctor())
+    pipe = codec.Pipeline(stages)
+
+    n_total = int(rng.integers(2, 9))
+    n_part = int(rng.integers(1, n_total + 1))
+    if name == "rand_k_spatial" and n_part == 1:
+        # the avg/opt interpolations are undefined at n=1 (rho = R/(n-1));
+        # fl.server.resolve_pipeline rewrites to "one" — mirror it here
+        stages[0] = stages[0].replace(transform="one")
+        pipe = codec.Pipeline(stages)
+    participants = np.sort(rng.choice(n_total, n_part, replace=False))
+    d_flat = int(rng.integers(d_block, 4 * d_block + 1))
+    tree = {"x": jnp.asarray(rng.standard_normal((n_total, d_flat)),
+                             jnp.float32)}
+    n_owners = int(rng.integers(2, 5)) if ownership else None
+
+    key = jax.random.key(seed)
+    _, info, _ = collectives.compressed_mean_tree(
+        pipe, key, tree, participants=participants,
+        ownership=n_owners,
+    )
+
+    # declared ledger == actual payload bytes for a real encode
+    payload = pipe.encode_payload(key, 0, jnp.zeros((info["n_chunks"], d_block)))
+    assert codec.check_against_schema(payload) == []
+    assert payload.nbytes == pipe.payload_nbytes(info["n_chunks"])
+
+    # the collectives ledger charges exactly the survivors
+    assert info["n_clients"] == n_part
+    assert info["n_total"] == n_total
+    assert info["bytes_sent"] == n_part * pipe.payload_nbytes(info["n_chunks"])
+
+    # intra-pod columns: the taken route's column is THE column, and the
+    # standalone model reproduces the info dict exactly
+    if ownership:
+        assert info["n_shards"] == n_owners
+        assert info["intra_pod_bytes"] == info["intra_pod_bytes_ownership"]
+        model = collectives.intra_pod_traffic(
+            pipe, n_part, info["n_chunks"], n_owners,
+            plan=chunk_ownership(info["n_chunks"], n_owners))
+        assert model == {k: info[k] for k in model}
+    else:
+        assert info["intra_pod_bytes"] == 0  # single logical shard
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_ledger_honesty_heterogeneous_budget_rounds(seed):
+    """Randomized budget-group cohorts through fl.rounds: the per-round byte
+    ledger equals the sum of each group's declared payload bytes, with and
+    without ownership (24 cases)."""
+    from repro.fl import Cohort, RoundConfig, get_task, run_rounds
+
+    rng = np.random.default_rng(1000 + seed)
+    n_clients = int(rng.integers(4, 9))
+    budgets = tuple(int(rng.choice([4, 8, 16])) for _ in range(n_clients))
+    task = get_task("dme", n_clients=n_clients, d=D, rho=0.9, seed=seed)
+    pipe = codec.RandK(k=8, d_block=D)
+    cohort = Cohort(n_clients=n_clients, dropout=float(rng.uniform(0, 0.4)),
+                    budgets=budgets)
+    cfgs = [RoundConfig(n_rounds=2, seed=seed),
+            RoundConfig(n_rounds=2, seed=seed, ownership=True, n_owners=2)]
+    hists = [run_rounds(task, pipe, cohort, cfg)[1] for cfg in cfgs]
+    for hist in hists:
+        for t in range(2):
+            part = cohort.sample_round(seed, t)
+            want = sum(
+                codec.as_pipeline(pipe.replace(k=k_g)).payload_nbytes(1)
+                * len(ids_g)
+                for k_g, ids_g in cohort.budget_groups(part.survivors, pipe.k)
+            )
+            assert hist.bytes[t] == want
+    # ownership changes the server's internal routing, never the wire ledger
+    assert hists[0].bytes == hists[1].bytes
+    assert hists[0].mse == hists[1].mse
