@@ -19,6 +19,21 @@ def timed(fn, *args, warmup=1, iters=3):
     return (time.time() - t0) / iters, out
 
 
+def timed_with_compile(fn, *args, iters=3):
+    """(first-call sec, steady-state sec/call, out) for a fresh-jitted fn.
+
+    The first call traces + compiles; reporting it as its own column keeps
+    compile time from polluting steady-state walltime rows (and makes
+    compile-time regressions visible instead of folded into an average)."""
+    t0 = time.time()
+    out = jax.block_until_ready(fn(*args))
+    compile_sec = time.time() - t0
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return compile_sec, (time.time() - t0) / iters, out
+
+
 def mse_over_trials(spec, xs, trials: int, seed: int = 0):
     # ``spec``: a codec Pipeline or sparsifier config (mean_estimate normalises)
     """Mean squared error E||x_hat - x_bar||^2 over `trials` rounds, timed."""

@@ -106,13 +106,25 @@ def srht_eig_bank(
     return eigs
 
 
-def beta_fn_from_bank(bank: np.ndarray, n: int, d: int):
-    """-> callable rho -> beta (jnp, differentiable; rho may be traced)."""
+def beta_fn_from_bank(bank: np.ndarray, n: int, d: int, eps: float = 0.0):
+    """-> callable rho -> beta (jnp, differentiable; rho may be traced).
+
+    With ``eps > 0`` the constant calibrates the RIDGE-filtered estimator
+    x_hat = (beta_eps/n) (T(S) + eps I)^{-1} y used by the fused CG decode
+    (docs/DESIGN.md §3.5): the same isotropy argument applies verbatim to
+    T_eps(lambda) = T(lambda) + eps, so unbiasedness is exact, not
+    approximate. Because T_eps is bounded away from zero the spectral
+    floor used at eps == 0 to emulate the pseudo-inverse is dropped —
+    near-zero bank eigenvalues self-suppress via lambda / (T(lambda) + eps).
+    """
     bank_j = jnp.asarray(bank)
 
     def beta(rho):
-        t = transforms.t_apply(bank_j, rho)
-        contrib = jnp.where(bank_j > 1e-4, bank_j / t, 0.0)
+        t = transforms.t_apply(bank_j, rho) + eps
+        if eps > 0.0:
+            contrib = jnp.maximum(bank_j, 0.0) / t
+        else:
+            contrib = jnp.where(bank_j > 1e-4, bank_j / t, 0.0)
         c = jnp.mean(jnp.sum(contrib, axis=-1)) / (n * d)
         return 1.0 / c
 
@@ -143,4 +155,7 @@ def rand_k_spatial_beta(n: int, k: int, d: int, rho) -> jnp.ndarray:
     p, pmf = rand_k_spatial_beta_weights(n, k, d)
     m = jnp.asarray(1.0 + np.arange(n), jnp.float32)  # 1 + B
     inv_t = 1.0 / transforms.t_apply(m, rho)
-    return 1.0 / (p * jnp.dot(jnp.asarray(pmf, jnp.float32), inv_t))
+    # multiply + row-sum rather than jnp.dot: a batched dot (this is vmapped
+    # over per-chunk rho in r_mode="est") may pick a batch-shape-dependent
+    # reduction, breaking the ownership slice-parity contract at 1 ulp.
+    return 1.0 / (p * jnp.sum(jnp.asarray(pmf, jnp.float32) * inv_t, axis=-1))

@@ -105,10 +105,17 @@ class RandProjSpatial(RandK):
     transform: str = "avg"
     r_value: float | None = None
     r_mode: str = "fixed"
-    decode_method: str = "gram"   # gram | direct (paper-literal d x d eigh)
+    # auto  -> "fused" for srht/subsample, "gram" for gauss
+    # fused -> batched kernel fast path: matrix-free CG resolvent solve
+    #          (docs/DESIGN.md §3.5, docs/KERNELS.md), no eigh
+    # gram  -> nk x nk Gram eigendecomposition (docs/DESIGN.md §3.3)
+    # direct-> paper-literal d x d eigh (oracle path)
+    decode_method: str = "auto"
     projection: str = "srht"      # srht | subsample (Lemma 4.1) | gauss
     beta_trials: int | None = None
     use_pallas: str = "auto"
+    ridge: float = 1e-2           # eps of the fused resolvent solve (T + eps)
+    cg_iters: int = 64            # CG iteration cap of the fused decode
 
     def payload_schema(self, n_chunks: int) -> tuple:
         schema = (ArraySpec("vals", (n_chunks, self.k), "float32", VALUES),)

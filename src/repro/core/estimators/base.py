@@ -50,7 +50,7 @@ class EstimatorSpec:
     r_value: float | None = None     # oracle R for transform="opt", r_mode="fixed"
     r_mode: str = "fixed"            # fixed | est (online R-hat from payloads)
     shared_randomness: bool = True   # same G_i for all chunks of a round (fast path)
-    decode_method: str = "gram"      # gram | direct (paper-literal d x d eigh)
+    decode_method: str = "auto"      # auto | fused | gram | direct
     projection: str = "srht"         # srht | subsample (Lemma 4.1) | gauss
     beta_trials: int | None = None   # None -> adaptive default
     use_pallas: str = "auto"         # auto | force | never

@@ -4,7 +4,7 @@ Encode (client i):   xh_i = G_i x_i,  G_i = (1/sqrt(d)) E_i H D_i   (SRHT, Eq. 6
 Decode (server):     x_hat = (beta/n) (T(S))^dagger sum_i G_i^T G_i x_i,
                      S = sum_i G_i^T G_i,  T applied to S's eigenvalues.
 
-Two decode paths (tests assert they agree to float tolerance):
+Three decode paths (tests assert they agree to float tolerance):
 
 - ``direct``  — the paper-literal algorithm: materialise S (d x d), eigh,
   apply T to the spectrum. O(d^2 nk). Kept as the faithful oracle.
@@ -16,6 +16,22 @@ Two decode paths (tests assert they agree to float tolerance):
 
   which is EXACT (y = A^T z lies in range(S)) and costs O((nk)^2 d) MXU
   matmuls + one small eigh — removing the paper's Limitation #1.
+- ``fused``   — the kernel fast path (docs/DESIGN.md §3.5, docs/KERNELS.md),
+  default via ``decode_method="auto"`` for srht/subsample projections. The
+  family transform is AFFINE, T(lambda) = 1 - rho + rho*lambda, so applying
+  (T(S))^dagger to y = sum_i G_i^T z_i (which lies in range(S)) is a linear
+  resolvent solve, not a spectral one:
+
+      ((1 - rho + eps) I + rho S) x = y,      x_hat = (beta_eps / n) x
+
+  solved matrix-free by conjugate gradients, where every S v is ONE fused
+  Pallas launch (two FWHTs with a coordinate mask between them, batched over
+  clients x chunks — kernels/srht_fused.py). No A materialisation, no eigh.
+  The ridge eps keeps the solve well-posed at rho = 1; unbiasedness stays
+  EXACT because beta is recalibrated against T_eps = T + eps (see
+  beta.beta_fn_from_bank). With projection="subsample" S is diagonal (the
+  hit-counts), the solve is closed-form with eps = 0, and the fused path is
+  Rand-k-Spatial (Lemma 4.1) without any linear algebra.
 
 ``shared_randomness=True`` uses one {G_i} draw for all chunks of a round, so
 a single Gram eigendecomposition serves every chunk and the per-chunk work
@@ -33,11 +49,13 @@ import jax
 import jax.numpy as jnp
 
 from ...kernels import ops as kops
+from ...kernels import ref as kref
 from .. import beta as beta_lib
 from .. import transforms
 from . import base
 
 _EPS = 1e-4
+_CG_TOL = 1e-4  # relative residual target of the fused resolvent solve
 
 
 def _client_draw(spec, ckey):
@@ -47,7 +65,11 @@ def _client_draw(spec, ckey):
     proj = getattr(spec, "projection", None) or "srht"
     if proj == "srht":
         signs = jax.random.rademacher(k1, (d,), jnp.float32)
-        rows = jax.random.permutation(k2, d)[:k]
+        # Uniform k-subset via top_k over random bits: same law as
+        # permutation(d)[:k] (rows stay distinct, as G_i G_i^T = I_k
+        # requires) but ~6x cheaper — permutation dominates the whole
+        # fused-decode walltime at fig5 scale otherwise.
+        rows = jax.lax.top_k(jax.random.bits(k2, (d,), jnp.uint32), k)[1]
         return {"signs": signs, "rows": rows}
     if proj == "subsample":
         # derive rows exactly as rand_k._indices does (from the unsplit client
@@ -88,7 +110,16 @@ def encode(spec, key, client_id, x_cd):
     else:
         keys = jax.vmap(base.chunk_key, in_axes=(None, 0))(ckey, jnp.arange(c))
         draws = jax.vmap(lambda kk: _client_draw(spec, kk))(keys)
-        vals = jax.vmap(lambda dr, x: _apply_g(spec, dr, x[None])[0])(draws, x_cd)
+        if "signs" in draws:
+            # fused batched encode: per-chunk sign flip + FWHT in one pass
+            # (kernels/srht_fused.py); the row gather stays in XLA.
+            vals = kops.srht_encode_batch(
+                x_cd, draws["signs"], draws["rows"], use_pallas=spec.use_pallas
+            )
+        elif "g" in draws:
+            vals = jnp.einsum("ckd,cd->ck", draws["g"], x_cd)
+        else:
+            vals = jnp.take_along_axis(x_cd, draws["rows"], axis=-1)
     out = {"vals": vals}
     if spec.r_mode == "est":
         out["norm_sq"] = jnp.sum(x_cd.astype(jnp.float32) ** 2, axis=-1)
@@ -134,15 +165,18 @@ def _spectral_weights(spec, n, lam, rho):
     return jnp.where(mask[None, :], 1.0 / t, 0.0)  # (C, nk)
 
 
-def _beta(spec, n, rho):
+def _beta(spec, n, rho, eps: float = 0.0):
     if spec.projection == "subsample":
         # eigenvalues of S are the binomial hit-counts M_j: beta is exact
-        # (Lemma 4.1: the estimator IS Rand-k-Spatial).
-        return beta_lib.rand_k_spatial_beta(n, spec.k, spec.d_block, rho)
-    bank = beta_lib.srht_eig_bank(
-        n, spec.k, spec.d_block, spec.beta_trials, projection=spec.projection
-    )
-    fn = beta_lib.beta_fn_from_bank(bank, n, spec.d_block)
+        # (Lemma 4.1: the estimator IS Rand-k-Spatial). The fused decode
+        # solves the diagonal system exactly, so no ridge is involved.
+        def fn(r):
+            return beta_lib.rand_k_spatial_beta(n, spec.k, spec.d_block, r)
+    else:
+        bank = beta_lib.srht_eig_bank(
+            n, spec.k, spec.d_block, spec.beta_trials, projection=spec.projection
+        )
+        fn = beta_lib.beta_fn_from_bank(bank, n, spec.d_block, eps=eps)
     if jnp.ndim(rho) == 0:
         return fn(rho)
     return jax.vmap(fn)(rho)
@@ -190,11 +224,159 @@ def _decode_one_direct(spec, n, a, z, norm_sq):
     return scale * xh
 
 
+def _fused_draws(spec, key, n, c, client_ids, chunk_offset):
+    """All (client x chunk) draws, stacked for the batched kernels.
+
+    Returns leaves of shape (n, 1, ...) in shared_randomness mode (one draw
+    per client, broadcast over chunks) and (n, C, ...) otherwise. Chunk draws
+    are keyed by GLOBAL chunk position (chunk_offset + local index), so an
+    owner's slice decode re-derives the full decode's maps.
+    """
+    ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
+    if spec.shared_randomness:
+        draws = jax.vmap(lambda i: _client_draw(spec, base.client_key(key, i)))(ids)
+        return jax.tree.map(lambda v: v[:, None], draws)
+    chunk_ids = chunk_offset + jnp.arange(c)
+
+    def one(i):
+        ckey = base.client_key(key, i)
+        return jax.vmap(lambda cid: _client_draw(spec, base.chunk_key(ckey, cid)))(
+            chunk_ids
+        )
+
+    return jax.vmap(one)(ids)
+
+
+def _cg_resolvent_solve(y, rho, eps, apply_s, iters):
+    """Batched CG for ((1 - rho + eps) I + rho S) x = y, one system per chunk.
+
+    All reductions are per-chunk (row-independent), and converged chunks are
+    FROZEN via jnp.where — so decoding an owner's chunk slice is bitwise
+    identical to slicing the monolithic decode, regardless of how many extra
+    iterations the slowest chunk in the batch needs (the ownership-sharding
+    contract, tests/test_ownership.py).
+
+    y: (C, d); rho: scalar or (C,). Zero-payload chunks (y = 0, e.g. the
+    padding added by collectives.sharded_decode) converge at iteration 0 and
+    return exactly 0 — the alpha denominator is guarded so they cannot NaN.
+    """
+    c0 = 1.0 - rho + eps
+    c1 = rho
+
+    def col(v):
+        return v if jnp.ndim(v) == 0 else v[:, None]
+
+    def apply_m(v):
+        return col(c0) * v + col(c1) * apply_s(v)
+
+    ys = jnp.sum(y * y, axis=-1, keepdims=True)  # (C, 1)
+    tol2 = (_CG_TOL * _CG_TOL) * ys
+    x = jnp.zeros_like(y)
+    done = ys <= tol2  # catches y == 0 exactly
+    carry = (jnp.int32(0), x, y, y, ys, done)
+
+    def cond(carry):
+        it, _, _, _, _, done = carry
+        return (it < iters) & ~jnp.all(done)
+
+    def body(carry):
+        it, x, r, p, rs, done = carry
+        ap = apply_m(p)
+        pap = jnp.sum(p * ap, axis=-1, keepdims=True)
+        alpha = jnp.where(done, 0.0, rs / jnp.where(pap > 0, pap, 1.0))
+        x2 = jnp.where(done, x, x + alpha * p)
+        r2 = jnp.where(done, r, r - alpha * ap)
+        rs2 = jnp.where(done, rs, jnp.sum(r2 * r2, axis=-1, keepdims=True))
+        done2 = done | (rs2 <= tol2)
+        bet = jnp.where(done2, 0.0, rs2 / jnp.where(rs > 0, rs, 1.0))
+        p2 = jnp.where(done2, p, r2 + bet * p)
+        return it + 1, x2, r2, p2, rs2, done2
+
+    _, x, _, _, _, _ = jax.lax.while_loop(cond, body, carry)
+    return x
+
+
+def _decode_fused(spec, key, payloads, n, client_ids, chunk_offset):
+    """Kernel fast-path decode: batched over (clients x chunks), no eigh.
+
+    y = sum_i G_i^T z_i is one fused scatter-add launch; (T(S))^dagger y is a
+    matrix-free resolvent solve (CG whose inner apply is one fused Gram
+    launch), or a closed-form diagonal solve for projection="subsample".
+    """
+    d, k = spec.d_block, spec.k
+    vals = payloads["vals"].astype(jnp.float32)  # (n, C, k)
+    norm_sq = payloads.get("norm_sq")
+    c = vals.shape[1]
+    draws = _fused_draws(spec, key, n, c, client_ids, chunk_offset)
+    rows = draws["rows"]  # (n, Cs, k), Cs in {1, C}
+    signs = draws.get("signs")
+
+    if signs is not None:
+        y = kops.srht_decode_sum(vals, signs, rows, d, use_pallas=spec.use_pallas)
+    else:
+        y = jnp.sum(kref.srht_scatter_ref(vals, rows, d), axis=0)  # (C, d)
+
+    if spec.r_mode == "est":
+        # matrix-free R-hat (docs/DESIGN.md §5): z^T A A^T z = ||A^T z||^2 =
+        # ||y||^2 and z_i^T G_i G_i^T z_i = ||z_i||^2 (G_i G_i^T = I_k exactly
+        # for srht and subsample maps), so no Gram matrix is needed and the
+        # statistic is per-chunk — it shards untouched across owners.
+        sc = (d / k) ** 2
+        tot = sc * jnp.sum(y * y, axis=-1)  # (C,)
+        per = sc * jnp.sum(vals * vals, axis=(0, 2))  # (C,)
+        r_hat = (tot - per) / (jnp.sum(norm_sq, axis=0) + 1e-12)
+        rho = transforms.clip_rho(r_hat / (n - 1.0), n)  # (C,)
+    else:
+        rho = jnp.asarray(transforms.rho_for(spec.transform, n, spec.r_value))
+
+    mask = kref.srht_scatter_ref(jnp.ones(rows.shape, jnp.float32), rows, d)
+
+    if spec.projection == "subsample":
+        # S = diag(hit counts): (T(S))^dagger is a closed-form elementwise
+        # divide — the fused path IS Rand-k-Spatial (Lemma 4.1), eps = 0.
+        hits = jnp.sum(mask, axis=0)  # (Cs, d)
+        t = transforms.t_apply(hits, rho if jnp.ndim(rho) == 0 else rho[:, None])
+        # explicit reciprocal-then-multiply: keeps the op sequence identical
+        # across batch shapes (XLA may otherwise hoist broadcast divides),
+        # which the ownership slice-parity contract relies on.
+        xh = y * jnp.where(hits > 0, 1.0 / t, 0.0)
+        b = _beta(spec, n, rho)
+    else:
+        eps = getattr(spec, "ridge", 1e-2)
+        iters = getattr(spec, "cg_iters", 64)
+
+        def apply_s(v):
+            return kops.srht_gram_apply(v, signs, mask, use_pallas=spec.use_pallas)
+
+        xh = _cg_resolvent_solve(y, rho, eps, apply_s, iters)
+        b = _beta(spec, n, rho, eps=eps)
+
+    scale = (b / n) if jnp.ndim(b) == 0 else (b / n)[:, None]
+    return scale * xh
+
+
+def _resolve_decode_method(spec) -> str:
+    method = getattr(spec, "decode_method", "auto") or "auto"
+    if method == "auto":
+        proj = getattr(spec, "projection", None) or "srht"
+        return "fused" if proj in ("srht", "subsample") else "gram"
+    return method
+
+
 def decode(spec, key, payloads, n, client_ids=None, chunk_offset=0):
+    method = _resolve_decode_method(spec)
+    if method == "fused":
+        proj = getattr(spec, "projection", None) or "srht"
+        if proj == "gauss":
+            raise ValueError(
+                'decode_method="fused" needs an SRHT or subsample projection '
+                "(gauss maps have no FWHT structure) — use gram/direct/auto"
+            )
+        return _decode_fused(spec, key, payloads, n, client_ids, chunk_offset)
     vals = payloads["vals"]  # (n, C, k)
     norm_sq = payloads.get("norm_sq")  # (n, C) or None
     z = jnp.moveaxis(vals, 0, 1).astype(jnp.float32)  # (C, n, k)
-    dec = _decode_one_gram if spec.decode_method == "gram" else _decode_one_direct
+    dec = _decode_one_gram if method == "gram" else _decode_one_direct
     if spec.shared_randomness:
         a = _stack_a(spec, key, n, client_ids=client_ids)
         return dec(spec, n, a, z, norm_sq)

@@ -280,29 +280,47 @@ def sharded_decode(pipe, key, payloads, n: int, plan, *, client_ids=None):
     """Owner-partitioned server decode of a stacked payload (leading client
     axis): decode each owner's chunk slice at its global offset and
     concatenate. This is the decode the shard_map ownership path runs
-    per-owner; here the owners are iterated in one process, which makes the
-    partition testable anywhere and serves the local/gspmd backends.
+    per-owner; here all owners run in ONE batched (vmapped) decode call — the
+    chunk axis is padded to ``plan.padded_chunks`` and reshaped owner-major,
+    so every owner decodes an equal-width slice and no per-owner Python loop
+    (or per-owner compilation) remains. Padded tail chunks decode from
+    all-zero payloads (every registered codec maps them to finite values;
+    the fused rand_proj_spatial CG converges on them at iteration 0) and are
+    dropped before returning. This makes the partition testable anywhere and
+    serves the local/gspmd backends.
 
     Bit-identical to ``pipe.decode_payload(key, payloads, n)`` for every
     ``decode_shardable`` pipeline: per-chunk decode reads only its own
     payload rows, and position-keyed randomness is re-derived from the
     GLOBAL chunk id via ``chunk_offset``. Sole float-level exception:
-    ``rand_proj_spatial(r_mode='est')`` — its per-chunk R-hat einsum
-    associates differently per slice width, so parity there is numerical
-    (allclose), not bitwise (tests/test_ownership.py pins both contracts).
+    ``rand_proj_spatial(r_mode='est', decode_method='gram')`` — the gram
+    R-hat einsum associates differently per slice width, so parity there is
+    numerical (allclose), not bitwise (tests/test_ownership.py pins both
+    contracts; the fused decode's R-hat is per-chunk elementwise and exact).
     """
     check_shardable(pipe)
-    outs = []
-    for s in range(plan.n_shards):
-        lo, hi = plan.slice_for(s)
-        if hi <= lo:
-            continue  # fully-padded tail owner: nothing real to decode
-        sliced = jax.tree.map(lambda leaf: leaf[:, lo:hi], payloads)
-        outs.append(
-            pipe.decode_payload(key, sliced, n, client_ids=client_ids,
-                                chunk_offset=lo)
+    cpo = plan.chunks_per_owner
+    pad = plan.padded_chunks - plan.n_chunks
+    padded = payloads
+    if pad:
+        padded = jax.tree.map(
+            lambda leaf: jnp.pad(leaf, [(0, 0), (0, pad)] + [(0, 0)] * (leaf.ndim - 2)),
+            payloads,
         )
-    return jnp.concatenate(outs, axis=0)
+    tiles = jax.tree.map(
+        lambda leaf: jnp.moveaxis(
+            leaf.reshape(leaf.shape[0], plan.n_shards, cpo, *leaf.shape[2:]), 1, 0
+        ),
+        padded,
+    )
+    offsets = jnp.arange(plan.n_shards) * cpo
+
+    def owner_decode(tile, lo):
+        return pipe.decode_payload(key, tile, n, client_ids=client_ids,
+                                   chunk_offset=lo)
+
+    outs = jax.vmap(owner_decode)(tiles, offsets)  # (n_shards, cpo, d_block)
+    return outs.reshape(plan.padded_chunks, *outs.shape[2:])[: plan.n_chunks]
 
 
 def _double_buffer(tiles, produce, consume) -> list:

@@ -93,6 +93,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="true per-client temporal memories (codec.Temporal)")
     ap.add_argument("--ef", action="store_true",
                     help="error-feedback stage (residuals in ClientState)")
+    ap.add_argument("--no-fused-kernels", dest="no_fused_kernels",
+                    action="store_true",
+                    help="escape hatch: decode rand_proj_spatial via the "
+                         "unfused Gram-eigh path instead of the fused "
+                         "matrix-free kernel fast path (docs/KERNELS.md); "
+                         "no-op for estimators without a fused decode")
     ap.add_argument("--payload-dtype", default="float32",
                     choices=["float32", "bfloat16", "int8"],
                     help="quantizer stage appended to the pipeline")
@@ -136,6 +142,8 @@ def make_task(args):
 def run_one(task, args, name, est_kw):
     d_block = args.d_block or min(1024, max(64, 1 << (task.dim - 1).bit_length()))
     k = args.k or max(1, d_block // 10)
+    if getattr(args, "no_fused_kernels", False) and name == "rand_proj_spatial":
+        est_kw = dict(est_kw, decode_method="gram")
     spec = codec.build(
         name, k=k, d_block=d_block,
         payload_dtype=getattr(args, "payload_dtype", "float32"),

@@ -4,6 +4,12 @@
 ``srht_encode`` - fused SRHT encode:  (1/sqrt(d)) (H (signs*x))[rows].
 ``srht_decode`` - SRHT adjoint:       (1/sqrt(d)) signs * (H scatter(u)).
 
+Fused batched ops behind the rand_proj_spatial fast path (docs/KERNELS.md):
+
+``srht_encode_batch`` - encode with one independent draw per (client, chunk).
+``srht_decode_sum``   - y_c = sum_i G_i^T z_ic in one launch.
+``srht_gram_apply``   - matrix-free S v = sum_i G_i^T G_i v (CG inner apply).
+
 On TPU the Pallas kernel is used (compiled); elsewhere the same kernel body
 runs in interpret mode, or the pure-jnp oracle for tiny shapes where the
 interpreter overhead dominates. The oracle (kernels/ref.py) is the
@@ -126,6 +132,89 @@ def flash_attention(q, k, v, *, rep: int, window: int = 0, q_offset: int = 0,
             q_tile=q_tile, kv_tile=kv_tile, interpret=interp,
         )
     return _ref.flash_attention_ref(q, k, v, rep=rep, window=window, q_offset=q_offset)
+
+
+def srht_encode_batch(
+    x: jnp.ndarray,
+    signs: jnp.ndarray,
+    rows: jnp.ndarray,
+    *,
+    use_pallas: str | bool = "auto",
+) -> jnp.ndarray:
+    """Fused batched SRHT encode with PER-ROW draws.
+
+    ``out[..r..] = (1/sqrt(d)) (H (signs[..r..] * x[..r..]))[rows[..r..]]``
+
+    x, signs: (..., d); rows: (..., k) int32 — leading dims aligned, one
+    independent draw per leading index (the non-shared-randomness encode,
+    batched over clients x chunks). Contrast `srht_encode`, which shares one
+    (signs, rows) draw across the whole batch.
+    """
+    from .srht_fused import fwht_rowsigns_pallas
+
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, d)
+    s2 = jnp.broadcast_to(signs, x.shape).reshape(-1, d)
+    use, interp = _should_use_pallas(x2.size, use_pallas)
+    inv = 1.0 / math.sqrt(d)
+    if use:
+        t = fwht_rowsigns_pallas(x2, s2, sign_pre=True, scale=inv, interpret=interp)
+    else:
+        t = _ref.fwht_rowsigns_ref(x2, s2, sign_pre=True, scale=inv)
+    t = t.reshape(*lead, d)
+    return jnp.take_along_axis(t, rows, axis=-1)
+
+
+def srht_decode_sum(
+    z: jnp.ndarray,
+    signs: jnp.ndarray,
+    rows: jnp.ndarray,
+    d: int,
+    *,
+    use_pallas: str | bool = "auto",
+) -> jnp.ndarray:
+    """Fused client-summed SRHT adjoint ``y_c = sum_i G_i^T z_ic``.
+
+    z: (n, C, k); signs: (n, C|1, d); rows: (n, C|1, k) — the middle axis is 1
+    when clients share one draw across chunks (shared_randomness). -> (C, d)
+
+    The scatter to full width stays in XLA (cheap, k << d, fuses with the
+    payload unpack); the FWHT + sign/scale + scatter-add over clients is one
+    Pallas launch batched over (clients x chunks).
+    """
+    from .srht_fused import srht_decode_sum_pallas
+
+    full = _ref.srht_scatter_ref(z, rows, d)  # (n, C, d)
+    use, interp = _should_use_pallas(full.size, use_pallas)
+    inv = 1.0 / math.sqrt(d)
+    if use:
+        return srht_decode_sum_pallas(full, signs, scale=inv, interpret=interp)
+    out = _ref.fwht_rowsigns_ref(full, signs, sign_post=True, scale=inv)
+    return jnp.sum(out, axis=0)
+
+
+def srht_gram_apply(
+    v: jnp.ndarray,
+    signs: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    use_pallas: str | bool = "auto",
+) -> jnp.ndarray:
+    """Fused matrix-free ``S v = sum_i G_i^T G_i v`` for SRHT maps.
+
+    v: (C, d); signs, mask: (n, C|1, d) with mask the 0/1 row indicator of
+    each draw. Two FWHTs with a coordinate mask between them — the CG inner
+    apply of the fused decode (docs/DESIGN.md §3.5). -> (C, d)
+    """
+    from .srht_fused import srht_gram_apply_pallas
+
+    n = signs.shape[0]
+    d = v.shape[-1]
+    use, interp = _should_use_pallas(n * v.shape[0] * d, use_pallas)
+    if use:
+        return srht_gram_apply_pallas(v, signs, mask, scale=1.0 / d, interpret=interp)
+    return _ref.srht_gram_apply_ref(v, signs, mask)
 
 
 def srht_rows_matrix(signs: jnp.ndarray, rows: jnp.ndarray, d: int) -> jnp.ndarray:

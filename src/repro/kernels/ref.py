@@ -88,3 +88,89 @@ def srht_decode_ref(u: jnp.ndarray, signs: jnp.ndarray, rows: jnp.ndarray, d: in
     full = jnp.zeros(u.shape[:-1] + (d,), u.dtype)
     full = full.at[..., rows].set(u)
     return fwht_ref(full) * (signs * (1.0 / np.sqrt(d)))
+
+
+# ------------------------------------------------- fused-kernel oracles
+# Ground truth for kernels/srht_fused.py: the batched per-row-signs FWHT
+# (encode side) and the client-summed adjoint / Gram applies (decode side).
+# Scale is applied as an explicit elementwise multiply AFTER the transform —
+# the fused kernels place it identically, which is what makes the bitwise
+# golden tests in tests/test_kernels.py possible (integer-valued inputs keep
+# every +-1 Hadamard partial sum exact in float32).
+
+
+def srht_scatter_ref(z: jnp.ndarray, rows: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Scatter payload values to full width: out[..., rows[..., j]] = z[..., j].
+
+    z: (..., k); rows: int32, broadcastable to z's shape. -> (..., d)
+    """
+    z = jnp.asarray(z)
+    rows = jnp.broadcast_to(rows, z.shape)
+    full = jnp.zeros(z.shape[:-1] + (d,), z.dtype)
+    idx = tuple(
+        jnp.arange(s).reshape((1,) * i + (s,) + (1,) * (z.ndim - i - 1))
+        for i, s in enumerate(z.shape[:-1])
+    )
+    return full.at[idx + (rows,)].set(z)
+
+
+def fwht_rowsigns_ref(
+    x: jnp.ndarray,
+    signs: jnp.ndarray | None,
+    *,
+    sign_pre: bool = False,
+    sign_post: bool = False,
+    scale: float = 1.0,
+) -> jnp.ndarray:
+    """Batched FWHT with PER-ROW Rademacher diagonals:
+    ``scale * [signs *] H ([signs *] x)``.
+
+    x: (..., d); signs broadcastable to x (one diagonal per leading index).
+    ``sign_pre`` flips before the transform (encode side), ``sign_post``
+    after (decode/adjoint side).
+    """
+    t = x * signs if sign_pre else x
+    t = fwht_ref(t)
+    if sign_post:
+        t = t * signs
+    if scale != 1.0:
+        t = t * jnp.asarray(scale, t.dtype)
+    return t
+
+
+def srht_encode_batch_ref(x: jnp.ndarray, signs: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """Batched SRHT encode with per-row draws:
+    ``(1/sqrt(d)) (H (signs * x))[rows]`` row-for-row.
+
+    x, signs: (..., d); rows: (..., k) int32 (leading dims aligned)."""
+    d = x.shape[-1]
+    t = fwht_rowsigns_ref(x, signs, sign_pre=True, scale=1.0 / np.sqrt(d))
+    return jnp.take_along_axis(t, rows, axis=-1)
+
+
+def srht_decode_sum_ref(
+    z: jnp.ndarray, signs: jnp.ndarray, rows: jnp.ndarray, d: int
+) -> jnp.ndarray:
+    """Client-summed SRHT adjoint ``y = sum_i G_i^T z_i`` per chunk.
+
+    z: (n, C, k); signs: (n, C|1, d); rows: (n, C|1, k). -> (C, d)
+    """
+    full = srht_scatter_ref(z, rows, d)  # (n, C, d)
+    out = fwht_rowsigns_ref(full, signs, sign_post=True, scale=1.0 / np.sqrt(d))
+    return jnp.sum(out, axis=0)
+
+
+def srht_gram_apply_ref(v: jnp.ndarray, signs: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Matrix-free ``S v = sum_i G_i^T G_i v`` for SRHT maps.
+
+    Because G_i^T G_i = (1/d) D_i H^T E_i^T E_i H D_i, the apply is two FWHTs
+    with a coordinate mask between them, summed over clients:
+
+        S v = (1/d) sum_i signs_i * H (mask_i * H (signs_i * v))
+
+    v: (C, d); signs, mask: (n, C|1, d). -> (C, d)
+    """
+    d = v.shape[-1]
+    t = fwht_rowsigns_ref(v[None], signs, sign_pre=True)       # (n, C, d)
+    t = fwht_rowsigns_ref(mask * t, signs, sign_post=True, scale=1.0 / d)
+    return jnp.sum(t, axis=0)

@@ -113,6 +113,27 @@ def test_unbiasedness_sparsifier_x_quantizer(sp_name, sp_ctor, q_name, q_ctor,
     assert (err < 6 * sem + slack).all(), (pipe.describe(), float(err.max()))
 
 
+@pytest.mark.parametrize("ownership", [False, True],
+                         ids=["monolithic", "ownership"])
+@pytest.mark.parametrize("projection", ["srht", "subsample"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_unbiasedness_fused_decode_routes(projection, seed, ownership):
+    """Unbiasedness survives the fused kernel decode (docs/DESIGN.md §3.5)
+    through BOTH decode routes — monolithic and owner-partitioned — for the
+    CG resolvent solve (srht; the ridge eps is compensated exactly by the
+    recalibrated beta) and the diagonal closed form (subsample)."""
+    pipe = codec.as_pipeline(codec.RandProjSpatial(
+        k=K, d_block=D, transform="avg", projection=projection,
+        decode_method="fused"))
+    xs = _clients(seed, rho=0.9)
+    plan = chunk_ownership(C, 2) if ownership else None
+    xhs = _mc_estimates(pipe, xs, plan, trials=160, seed=500 + seed)
+    xbar = np.asarray(jnp.mean(xs, axis=0))
+    err = np.abs(xhs.mean(0) - xbar)
+    sem = xhs.std(0) / np.sqrt(xhs.shape[0]) + 1e-4
+    assert (err < 6 * sem + 5e-3).all(), (projection, float(err.max()))
+
+
 def test_top_k_is_biased_hence_excluded():
     """The counter-property: top_k's E[decode] != mean (that is WHY it pairs
     with ErrorFeedback and sits outside the unbiased sweep)."""

@@ -9,7 +9,9 @@ Link check: every relative markdown link in README.md, ROADMAP.md, and
 docs/*.md must resolve to a file in the repo; ``#anchor`` fragments must
 match a heading in the target (GitHub slugification). External links
 (http/https/mailto) and GitHub web-relative links that escape the repo root
-(e.g. the CI badge's ``../../actions/...``) are skipped.
+(e.g. the CI badge's ``../../actions/...``) are skipped. Every
+``DESIGN.md §N[.M]`` section-number reference in the checked files must
+also name a real ``## §N`` / ``### §N.M`` heading in docs/DESIGN.md.
 
 Snippet check: ```python fenced blocks in README.md, docs/DESIGN.md and
 docs/API.md are executed — cumulatively per file, in one subprocess with
@@ -32,7 +34,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 LINK_FILES = ["README.md", "ROADMAP.md"] + sorted(
     os.path.relpath(p, REPO) for p in glob.glob(os.path.join(REPO, "docs", "*.md"))
 )
-SNIPPET_FILES = ["README.md", "docs/DESIGN.md", "docs/API.md"]
+SNIPPET_FILES = ["README.md", "docs/DESIGN.md", "docs/API.md", "docs/KERNELS.md"]
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
@@ -92,6 +94,34 @@ def check_links() -> list[str]:
                 if frag not in heading_slugs(resolved):
                     problems.append(
                         f"{rel}: broken anchor {m.group(1)!r}")
+    return problems
+
+
+_SECTION_HEADING_RE = re.compile(r"^#{2,3}\s+§([\d.]+)", re.MULTILINE)
+_SECTION_REF_RE = re.compile(r"DESIGN\.md\s+§([\d.]+?)(?=[^\d.]|\.?$)")
+
+
+def check_sections() -> list[str]:
+    """Every ``DESIGN.md §N[.M]`` reference anywhere in the docs must name a
+    section heading that actually exists in docs/DESIGN.md — prose and
+    docstrings cite sections by number, so a renumbering that leaves stale
+    references behind fails here instead of rotting silently."""
+    with open(os.path.join(REPO, "docs", "DESIGN.md"), encoding="utf-8") as f:
+        design = f.read()
+    design = re.sub(r"```.*?```", "", design, flags=re.DOTALL)
+    known = {m.group(1).rstrip(".") for m in _SECTION_HEADING_RE.finditer(design)}
+    if not known:
+        return ["docs/DESIGN.md: no '## §N' headings found (checker broken?)"]
+    problems = []
+    for rel in LINK_FILES:
+        with open(os.path.join(REPO, rel), encoding="utf-8") as f:
+            text = f.read()
+        for m in _SECTION_REF_RE.finditer(text):
+            num = m.group(1).rstrip(".")
+            if num not in known:
+                problems.append(
+                    f"{rel}: reference to DESIGN.md §{num}, which has no "
+                    f"matching heading (have: {', '.join(sorted(known))})")
     return problems
 
 
@@ -161,6 +191,7 @@ def main() -> int:
     if not args.snippets_only:
         print(f"link check over {', '.join(LINK_FILES)}")
         problems += check_links()
+        problems += check_sections()
     if not args.links_only:
         print(f"snippet check over {', '.join(SNIPPET_FILES)}")
         problems += check_snippets()
