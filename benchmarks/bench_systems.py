@@ -129,7 +129,8 @@ def ownership(out, n=32, k=64, d=512, n_chunks=64):
     ]:
         payloads, _ = est_pipe.encode_all(key, xs)
         comp_m, sec_mono, _ = timed_with_compile(
-            jax.jit(lambda kk: est_pipe.decode_payload(kk, payloads, n)), key)
+            jax.jit(lambda kk: est_pipe.decode_payload(kk, payloads, n)), key,
+            obs_name=f"decode_monolithic/{est_name}")
         rows(out,
              f"ownership/decode_monolithic/n{n}_k{k}_d{d}_C{n_chunks}/{est_name}",
              sec_mono * 1e6, f"server;compile_us={comp_m * 1e6:.0f}")
@@ -139,7 +140,8 @@ def ownership(out, n=32, k=64, d=512, n_chunks=64):
             sliced = jax.tree.map(lambda leaf: leaf[:, lo:hi], payloads)
             comp_o, sec_own, _ = timed_with_compile(
                 jax.jit(lambda kk: est_pipe.decode_payload(
-                    kk, sliced, n, chunk_offset=lo)), key)
+                    kk, sliced, n, chunk_offset=lo)), key,
+                obs_name=f"decode_sharded/{est_name}/s{n_shards}")
             if est_name == "rand_proj_spatial":
                 assert sec_own < sec_mono, (n_shards, sec_own, sec_mono)
             rows(out,
@@ -166,7 +168,7 @@ def fused_kernels(out, n=8, k=64, d=1024, n_chunks=4):
             payloads, _ = est_pipe.encode_all(key, xs)
             comp, sec, _ = timed_with_compile(
                 jax.jit(lambda kk: est_pipe.decode_payload(kk, payloads, n)),
-                key)
+                key, obs_name=f"decode/{label}/{variant}")
             rows(out,
                  f"kernel_fused/decode/n{n}_k{k}_d{d}_C{n_chunks}"
                  f"/{label}/{variant}",

@@ -19,19 +19,26 @@ def timed(fn, *args, warmup=1, iters=3):
     return (time.time() - t0) / iters, out
 
 
-def timed_with_compile(fn, *args, iters=3):
+def timed_with_compile(fn, *args, iters=3, obs_name=None):
     """(first-call sec, steady-state sec/call, out) for a fresh-jitted fn.
 
     The first call traces + compiles; reporting it as its own column keeps
     compile time from polluting steady-state walltime rows (and makes
-    compile-time regressions visible instead of folded into an average)."""
+    compile-time regressions visible instead of folded into an average).
+    ``obs_name`` additionally records the pair as ``bench/<obs_name>``
+    compile/steady gauges in the repro.obs registry (when enabled)."""
     t0 = time.time()
     out = jax.block_until_ready(fn(*args))
     compile_sec = time.time() - t0
     t0 = time.time()
     for _ in range(iters):
         out = jax.block_until_ready(fn(*args))
-    return compile_sec, (time.time() - t0) / iters, out
+    steady_sec = (time.time() - t0) / iters
+    if obs_name is not None:
+        from repro import obs
+
+        obs.record_compile("bench", obs_name, compile_sec, steady_sec)
+    return compile_sec, steady_sec, out
 
 
 def mse_over_trials(spec, xs, trials: int, seed: int = 0):

@@ -72,6 +72,26 @@ def smoke(out: list[str]) -> None:
              f"ratio={info['full_bytes'] / info['payload_bytes_per_client']:.1f}x")
 
 
+def run_metadata(mode: str) -> dict:
+    """The provenance stamp every benchmark artifact carries (schema v1):
+    enough to reproduce the run and to refuse to compare apples to oranges
+    across jax versions / backends / hosts. tools/bench_artifacts.py
+    validates its presence before CI uploads anything."""
+    import platform
+
+    import jax
+
+    return {
+        "mode": mode,
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+        "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+
+
 def write_json(out: list[str], mode: str, secs: float) -> str:
     records = []
     for line in out[1:]:
@@ -80,7 +100,11 @@ def write_json(out: list[str], mode: str, secs: float) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"BENCH_{mode}.json")
     with open(path, "w") as f:
-        json.dump({"mode": mode, "total_s": round(secs, 1), "rows": records}, f, indent=1)
+        json.dump(
+            {"schema_version": 1, "mode": mode, "run": run_metadata(mode),
+             "total_s": round(secs, 1), "rows": records},
+            f, indent=1,
+        )
     return path
 
 

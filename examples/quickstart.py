@@ -6,17 +6,15 @@ Eight clients hold correlated 1024-dim vectors; each may send only k=64
 numbers. Rand-Proj-Spatial (this paper) beats Rand-k and Rand-k-Spatial by
 using SRHT projections + correlation-aware spectral decoding.
 
-NOTE: this example deliberately stays on the deprecated flat ``EstimatorSpec``
-— it is the living proof that pre-migration call sites run unmodified through
-the codec-pipeline shim (emitting exactly one DeprecationWarning). New code
-should compose ``repro.core.codec`` pipelines; see examples/fl_logistic.py
-and the README quickstart.
+``codec.build(name, **kwargs)`` is the keyword-compatible constructor for
+the composable pipeline API; hand-composed ``codec.Pipeline([...])`` stages
+are equivalent — see examples/fl_logistic.py and the README quickstart.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EstimatorSpec, correlation, mean_estimate
+from repro.core import codec, correlation
 
 n, d, k = 8, 1024, 64
 rng = np.random.default_rng(0)
@@ -35,8 +33,8 @@ for name, kwargs in [
     ("rand_proj_spatial", dict(transform="avg")),
     ("rand_proj_spatial", dict(transform="opt", r_mode="est")),  # online R-hat (ours)
 ]:
-    spec = EstimatorSpec(name=name, k=k, d_block=d, **kwargs)
-    fn = jax.jit(lambda key: correlation.mse(mean_estimate(spec, key, xs), xbar))
+    pipe = codec.build(name, k=k, d_block=d, **kwargs)
+    fn = jax.jit(lambda key: correlation.mse(pipe.mean_estimate(key, xs), xbar))
     mses = jax.lax.map(fn, jax.random.split(jax.random.key(1), 100))
     label = name + ("(" + kwargs.get("transform", "") + ("/est" if kwargs.get("r_mode") == "est" else "") + ")")
     print(f"  {label:38s} MSE = {float(jnp.mean(mses)):.4f}")

@@ -4,15 +4,15 @@ Public surface:
     codec                — the composable codec pipeline API (Payload, Stage
                            configs, Pipeline, ClientState) — THE estimator API
     mean_estimate, encode, decode — functional conveniences (accept a
-                           Pipeline, a sparsifier config, or the deprecated
-                           EstimatorSpec)
+                           Pipeline or a sparsifier config)
     chunking             — framework-scale blockwise application
     correlation.r_exact  — paper Eq. 7
-    EstimatorSpec        — DEPRECATED flat spec; converts via codec.as_pipeline
+
+The deprecated flat ``EstimatorSpec`` is removed; ``codec.build(name,
+**old_kwargs)`` is the keyword-compatible constructor.
 """
 from . import beta, chunking, correlation, transforms  # noqa: F401
 from .estimators import (  # noqa: F401
-    EstimatorSpec,
     decode,
     encode,
     encode_all,

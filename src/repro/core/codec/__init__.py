@@ -16,10 +16,11 @@ orthogonal *stages* composed into a *pipeline*:
 
 Payloads are self-describing (budget + exact declared byte ledger riding in
 ``payload.meta``); client-held cross-round state (EF residuals, temporal
-memories) lives in an explicit ``ClientState`` pytree. The deprecated flat
-``EstimatorSpec`` converts via ``as_pipeline`` / ``build`` (see compat).
+memories) lives in an explicit ``ClientState`` pytree. ``build(name,
+**old_kwargs)`` (see compat) keeps the historical flat-keyword construction
+style working; the flat ``EstimatorSpec`` class itself is removed.
 """
-from .compat import as_pipeline, build, spec_to_pipeline  # noqa: F401
+from .compat import as_pipeline, build  # noqa: F401
 from .payload import (  # noqa: F401
     AUX,
     INDICES,

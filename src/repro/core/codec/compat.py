@@ -1,40 +1,48 @@
-"""Back-compat: the old flat ``EstimatorSpec`` -> codec ``Pipeline``.
+"""Keyword-compatible pipeline construction + the boundary normaliser.
 
-``build(name, **old_style_kwargs)`` is the one conversion point: it maps the
-deprecated cross-cutting spec fields onto the typed per-estimator configs
-(``wangni_capacity`` -> ``Wangni.capacity``, ``induced_topk_frac`` ->
-``Induced.topk_frac``, ``payload_dtype`` -> a quantizer stage, ``ef`` -> an
-``ErrorFeedback`` stage) and silently drops old spec fields that do not
-apply to the chosen sparsifier (the old dataclass carried every field for
-every estimator; e.g. ``transform`` on rand_k was always ignored). Unknown
+``build(name, **old_style_kwargs)`` is the one conversion point from the
+historical flat-keyword style: it maps the old cross-cutting field names
+onto the typed per-estimator configs (``wangni_capacity`` ->
+``Wangni.capacity``, ``induced_topk_frac`` -> ``Induced.topk_frac``,
+``payload_dtype`` -> a quantizer stage, ``ef`` -> an ``ErrorFeedback``
+stage) and silently drops legacy field names that do not apply to the
+chosen sparsifier (the old flat dataclass carried every field for every
+estimator; e.g. ``transform`` on rand_k was always ignored). Unknown
 keyword names still raise, so typos do not vanish.
 
-``as_pipeline`` is the boundary normaliser every migrated subsystem calls:
-Pipeline -> itself, bare Sparsifier config -> one-stage Pipeline,
-EstimatorSpec -> converted Pipeline. Constructing an ``EstimatorSpec`` warns
-(once per process, DeprecationWarning); converting one here does not warn
-again — the construction already did.
+``as_pipeline`` is the boundary normaliser every subsystem calls:
+Pipeline -> itself, bare Sparsifier config -> one-stage Pipeline, anything
+else -> TypeError. The deprecated ``EstimatorSpec`` branch (and its
+``spec_to_pipeline`` converter) is deleted — the class no longer exists;
+``build`` is the keyword-compatible survivor of that API.
 """
 from __future__ import annotations
 
 import dataclasses
 
-from ..estimators import base as est_base
 from .pipeline import Pipeline
 from .quantizers import QUANTIZERS
 from .sparsifiers import SPARSIFIERS, Sparsifier
 from .stages import ErrorFeedback, Temporal
 
-# old EstimatorSpec field -> per-estimator config field
+# old flat-spec field -> per-estimator config field
 _FIELD_RENAMES = {"wangni_capacity": "capacity", "induced_topk_frac": "topk_frac"}
 
-
-def _estspec_fields() -> set:
-    return {f.name for f in dataclasses.fields(est_base.EstimatorSpec)}
+# The field names of the deleted flat EstimatorSpec, frozen as the set of
+# legacy keywords ``build`` silently DROPS when the chosen sparsifier has no
+# such field (matching the old dataclass's carry-every-field behaviour).
+# Anything outside this set that the sparsifier does not take is a typo and
+# raises.
+_LEGACY_FIELDS = frozenset({
+    "name", "k", "d_block", "transform", "r_value", "r_mode",
+    "shared_randomness", "decode_method", "projection", "beta_trials",
+    "use_pallas", "wangni_capacity", "induced_topk_frac", "ef",
+    "payload_dtype",
+})
 
 
 def build(name: str, **kw) -> Pipeline:
-    """Old-style construction of a new-style pipeline.
+    """Old-style keyword construction of a new-style pipeline.
 
         build("rand_proj_spatial", k=64, d_block=1024, transform="avg",
               payload_dtype="int8", ef=True)
@@ -53,7 +61,7 @@ def build(name: str, **kw) -> Pipeline:
         new_key = _FIELD_RENAMES.get(key, key)
         if new_key in fields:
             cfg_kw[new_key] = value
-        elif key not in _estspec_fields():
+        elif key not in _LEGACY_FIELDS:
             raise TypeError(
                 f"{name!r} takes no field {key!r} (valid: {sorted(fields)})"
             )
@@ -74,24 +82,15 @@ def build(name: str, **kw) -> Pipeline:
     return Pipeline(tuple(stages))
 
 
-def spec_to_pipeline(spec: "est_base.EstimatorSpec") -> Pipeline:
-    kw = {
-        f.name: getattr(spec, f.name)
-        for f in dataclasses.fields(spec)
-        if f.name != "name"
-    }
-    return build(spec.name, **kw)
-
-
 def as_pipeline(obj) -> Pipeline:
     """Normalise any codec-like object to a Pipeline."""
     if isinstance(obj, Pipeline):
         return obj
     if isinstance(obj, Sparsifier):
         return Pipeline((obj,))
-    if isinstance(obj, est_base.EstimatorSpec):
-        return spec_to_pipeline(obj)
     raise TypeError(
-        f"expected Pipeline, sparsifier config or EstimatorSpec, got "
-        f"{type(obj).__name__}"
+        f"expected Pipeline or sparsifier config, got {type(obj).__name__}"
+        + (" (the deprecated EstimatorSpec was removed; use "
+           "codec.build(name, **kwargs))" if type(obj).__name__ ==
+           "EstimatorSpec" else "")
     )

@@ -19,8 +19,7 @@ returns the updated state next to the payload; stateless pipelines return
 lets one decode path serve heterogeneous-k cohorts on any backend.
 
 All stages are frozen dataclasses, so a ``Pipeline`` is hashable and can be
-closed over by jit / passed as a static argument, exactly like the
-deprecated ``EstimatorSpec`` it replaces.
+closed over by jit / passed as a static argument.
 """
 from __future__ import annotations
 
@@ -29,6 +28,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from ... import obs
 from ..estimators import base as est_base
 from .payload import LEGACY_VALUE_NAMES, Payload, PayloadMeta, arrays_of, meta_of
 from .sparsifiers import Sparsifier
@@ -260,6 +260,8 @@ class Pipeline:
         by the sharded server decode, where an owner decodes only its own
         chunk slice (``dist.collectives``, ``ownership=``)."""
         pipe = self._for_payload(payloads)
+        obs.count("codec", "decode.calls", sparsifier=pipe.sparsifier.name)
+        obs.count("codec", "decode.clients", n)
         arrays = pipe._dequantize(payloads)
         return pipe.sparsifier.decode(key, arrays, n, client_ids=client_ids,
                                       chunk_offset=chunk_offset)
@@ -334,6 +336,11 @@ class Pipeline:
         a larger cohort); ``states`` is a stacked ClientState for those same
         clients."""
         n = xs.shape[0]
+        if obs.enabled():  # guard: payload_nbytes builds a PayloadMeta
+            obs.count("codec", "encode_all.calls", sparsifier=self.sparsifier.name)
+            obs.count("codec", "encode_all.clients", n)
+            obs.count("codec", "encode_all.payload_bytes",
+                      n * self.payload_nbytes(xs.shape[1]))
         ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
         if states is None:
             payloads = jax.vmap(

@@ -1,5 +1,5 @@
 """Per-estimator sparsifier configs — the typed replacements for the
-cross-cutting fields of the deprecated ``EstimatorSpec``.
+cross-cutting fields of the old flat spec style (``codec.build`` keywords).
 
 Each config is a frozen dataclass carrying ONLY the fields its codec reads
 (``RandK`` has no ``transform``; ``Wangni`` owns ``capacity``; ``Induced``

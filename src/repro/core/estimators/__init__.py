@@ -2,12 +2,11 @@
 
 The estimator *API* moved to ``repro.core.codec`` (composable pipelines with
 typed payloads); this package keeps the registered codec implementations and
-the deprecated ``EstimatorSpec`` shim plus its functional wrappers.
+the functional wrappers.
 """
 from . import identity, induced, rand_k, rand_k_spatial, rand_proj_spatial, top_k, wangni  # noqa: F401
 from .base import (  # noqa: F401
     Codec,
-    EstimatorSpec,
     decode,
     encode,
     encode_all,

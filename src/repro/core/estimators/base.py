@@ -1,95 +1,35 @@
-"""Codec registry + the deprecated flat ``EstimatorSpec`` shim.
+"""Codec registry + shared key derivation + the functional estimator API.
 
-The estimator API lives in ``repro.core.codec`` now: a typed ``Payload``
+The estimator API lives in ``repro.core.codec``: a typed ``Payload``
 container, per-estimator config dataclasses, and a composable ``Pipeline``
 of stages (sparsifier / quantizer / error feedback / temporal). This module
-keeps two things:
+keeps the pieces under it:
 
-1. **The registry** — each codec implementation module registers a ``Codec``
-   (pure ``encode`` / ``decode`` / ``self_decode`` functions) under its
-   name. Implementations consume the typed sparsifier configs (they read
-   ``spec.k`` / ``spec.d_block`` / ...), and the shared-randomness key
-   derivation helpers (``client_key`` / ``chunk_key``) stay here: the round
-   key is shared by clients and server, per-client randomness is
-   ``fold_in(key, client_id)``, so indices/signs/seeds are never transmitted
-   (docs/DESIGN.md §3.6).
+- **The registry** — each codec implementation module registers a ``Codec``
+  (pure ``encode`` / ``decode`` / ``self_decode`` functions) under its
+  name. Implementations consume the typed sparsifier configs (they read
+  ``spec.k`` / ``spec.d_block`` / ...), and the shared-randomness key
+  derivation helpers (``client_key`` / ``chunk_key``) stay here: the round
+  key is shared by clients and server, per-client randomness is
+  ``fold_in(key, client_id)``, so indices/signs/seeds are never transmitted
+  (docs/DESIGN.md §3.6).
 
-2. **The deprecation shim** — ``EstimatorSpec`` still constructs (emitting
-   one ``DeprecationWarning`` per process) and every module-level function
-   (``encode`` / ``decode`` / ``encode_all`` / ``mean_estimate`` /
-   ``self_decode``) accepts an ``EstimatorSpec``, a sparsifier config, or a
-   ``Pipeline``, normalising through ``codec.as_pipeline``. Existing call
-   sites keep working unchanged during migration; new code should construct
-   pipelines directly (see docs/DESIGN.md §3.0 for the field-by-field
-   migration table).
+- **The functional wrappers** — ``encode`` / ``decode`` / ``encode_all`` /
+  ``mean_estimate`` / ``self_decode`` accept a ``Pipeline`` or a bare
+  sparsifier config (normalised via ``codec.as_pipeline``) for one-shot use
+  without threading pipeline state.
+
+The deprecated flat ``EstimatorSpec`` that used to live here is GONE (its
+one-process-warning shim ran for two release cycles); ``codec.build(name,
+**old_kwargs)`` remains as the keyword-compatible constructor — see the
+README migration table.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable
 
 import jax
-
-
-@dataclasses.dataclass(frozen=True)
-class EstimatorSpec:
-    """DEPRECATED flat estimator config — use ``repro.core.codec`` instead.
-
-    Construction converts 1:1 to a ``Pipeline`` via ``codec.as_pipeline``:
-    ``name``/``k``/``d_block``/... pick the sparsifier config,
-    ``payload_dtype`` becomes a quantizer stage, ``ef`` becomes an
-    ``ErrorFeedback`` stage. Kept so pre-migration call sites (and the
-    examples that demonstrate the shim) run unmodified.
-    """
-
-    name: str = "rand_proj_spatial"
-    k: int = 64                      # per-client per-chunk budget
-    d_block: int = 1024              # chunk size (power of two)
-    transform: str = "avg"           # spatial family: one|max|avg|opt
-    r_value: float | None = None     # oracle R for transform="opt", r_mode="fixed"
-    r_mode: str = "fixed"            # fixed | est (online R-hat from payloads)
-    shared_randomness: bool = True   # same G_i for all chunks of a round (fast path)
-    decode_method: str = "auto"      # auto | fused | gram | direct
-    projection: str = "srht"         # srht | subsample (Lemma 4.1) | gauss
-    beta_trials: int | None = None   # None -> adaptive default
-    use_pallas: str = "auto"         # auto | force | never
-    wangni_capacity: float = 1.5     # -> codec.Wangni(capacity=...)
-    induced_topk_frac: float = 0.5   # -> codec.Induced(topk_frac=...)
-    ef: bool = False                 # -> codec.ErrorFeedback() stage
-    payload_dtype: str = "float32"   # -> codec.Bf16Quant() / codec.Int8Quant()
-
-    def __post_init__(self):
-        _warn_deprecated_once()
-
-    def replace(self, **kw) -> "EstimatorSpec":
-        return dataclasses.replace(self, **kw)
-
-
-_DEPRECATION_MSG = (
-    "EstimatorSpec is deprecated; compose a repro.core.codec Pipeline instead "
-    "(codec.build(name, **old_kwargs) is the drop-in constructor; see "
-    "docs/DESIGN.md §3.0 for the migration table)"
-)
-_warned_deprecated = False
-
-
-def _warn_deprecated_once() -> None:
-    global _warned_deprecated
-    if _warned_deprecated:
-        return
-    # Latch only AFTER the warn call returns: under -W error::DeprecationWarning
-    # (the CI `deprecations` job) warn() raises and the latch stays unset, so
-    # EVERY stray first-party construction errors no matter what ran before it
-    # — the latch cannot be consumed by an earlier allowlisted test.
-    # stacklevel: user code -> generated __init__ -> __post_init__ -> here
-    warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=4)
-    _warned_deprecated = True
-
-
-def _reset_deprecation_warning_for_tests() -> None:
-    global _warned_deprecated
-    _warned_deprecated = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,9 +68,9 @@ def chunk_key(ckey, chunk_id):
 
 
 # --------------------------------------------------------------------------
-# Functional convenience API. Accepts EstimatorSpec | sparsifier config |
-# Pipeline; thin delegation to repro.core.codec (imported lazily — codec
-# imports this module for the registry).
+# Functional convenience API. Accepts a sparsifier config | Pipeline; thin
+# delegation to repro.core.codec (imported lazily — codec imports this
+# module for the registry).
 
 
 def _pipe(spec):

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from . import base
 
 
-def _indices(spec: base.EstimatorSpec, key, client_id, n_chunks: int,
+def _indices(spec, key, client_id, n_chunks: int,
              chunk_offset=0):
     """(C, k) int32 coordinate choices for one client.
 

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 
 from ...kernels import ops as kops
 from ...kernels import ref as kref
+from ...obs import record_cg_iters, record_decode_route
 from .. import beta as beta_lib
 from .. import transforms
 from . import base
@@ -292,8 +293,8 @@ def _cg_resolvent_solve(y, rho, eps, apply_s, iters):
         p2 = jnp.where(done2, p, r2 + bet * p)
         return it + 1, x2, r2, p2, rs2, done2
 
-    _, x, _, _, _, _ = jax.lax.while_loop(cond, body, carry)
-    return x
+    it, x, _, _, _, _ = jax.lax.while_loop(cond, body, carry)
+    return x, it
 
 
 def _decode_fused(spec, key, payloads, n, client_ids, chunk_offset):
@@ -348,7 +349,8 @@ def _decode_fused(spec, key, payloads, n, client_ids, chunk_offset):
         def apply_s(v):
             return kops.srht_gram_apply(v, signs, mask, use_pallas=spec.use_pallas)
 
-        xh = _cg_resolvent_solve(y, rho, eps, apply_s, iters)
+        xh, cg_it = _cg_resolvent_solve(y, rho, eps, apply_s, iters)
+        record_cg_iters(cg_it)  # eager runs sample; under jit it's a tracer -> dropped
         b = _beta(spec, n, rho, eps=eps)
 
     scale = (b / n) if jnp.ndim(b) == 0 else (b / n)[:, None]
@@ -365,6 +367,7 @@ def _resolve_decode_method(spec) -> str:
 
 def decode(spec, key, payloads, n, client_ids=None, chunk_offset=0):
     method = _resolve_decode_method(spec)
+    record_decode_route("rand_proj_spatial", method)
     if method == "fused":
         proj = getattr(spec, "projection", None) or "srht"
         if proj == "gauss":

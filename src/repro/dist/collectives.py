@@ -15,9 +15,8 @@ live on mesh ``client_axes``; each shard encodes its local clients' chunks,
 payloads cross the wire via ``all_gather`` (payload-sized traffic — the
 whole point of the estimator), and every shard decodes the identical mean.
 
-Both entry points accept any codec-like object — a ``codec.Pipeline``, a
-bare sparsifier config, or the deprecated ``EstimatorSpec`` (normalised via
-``codec.as_pipeline``).
+Both entry points accept any codec-like object — a ``codec.Pipeline`` or a
+bare sparsifier config (normalised via ``codec.as_pipeline``).
 
 Error feedback (an ``ErrorFeedback`` stage in the pipeline): residual
 buffers are (n_clients, C, d_block) chunk arrays threaded by the caller
@@ -75,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .. import obs
 from ..core import chunking
 from ..core.codec import as_pipeline
 from . import sharding as shard_lib
@@ -455,14 +455,21 @@ def compressed_mean_tree(spec, key, tree, shardings=None, ef_chunks=None,
             ownership=plan,
         )
     else:
-        payloads, _ = pipe.encode_all(key, x, client_ids=ids)
+        # walltime spans on the round-phase tracks (timing/attribution only —
+        # byte annotations stay with the fl driver, which owns the ledger)
+        with obs.span("dist", "client_encode", track="client_encode",
+                      clients=n):
+            payloads, _ = pipe.encode_all(key, x, client_ids=ids)
         if shardings is not None:
             payloads = shardings.constrain_tree(payloads)
-        if plan is not None:
-            mean_chunks = sharded_decode(pipe, key, payloads, n, plan,
-                                         client_ids=ids)
-        else:
-            mean_chunks = pipe.decode_payload(key, payloads, n, client_ids=ids)
+        with obs.span("dist", "owner_decode", track="owner_decode",
+                      clients=n, sharded=plan is not None):
+            if plan is not None:
+                mean_chunks = sharded_decode(pipe, key, payloads, n, plan,
+                                             client_ids=ids)
+            else:
+                mean_chunks = pipe.decode_payload(key, payloads, n,
+                                                  client_ids=ids)
         self_dec = None
         if pipe.has_ef:
             id_arr = jnp.arange(n) if ids is None else jnp.asarray(ids)
@@ -718,10 +725,15 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
         client_spec,
     )
     mean_specs = jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)), template)
-    mean_tree, ef_next = shard_map(
-        local_fn, mesh, in_specs=in_specs, out_specs=(mean_specs, client_spec),
-        check_rep=False,
-    )(key, grads, ef_chunks)
+    # ``local_fn`` is traced by shard_map, so per-phase spans cannot live
+    # inside it; the whole exchange gets one payload_route span (encode +
+    # all_gather/all_to_all + decode run fused in the traced program)
+    with obs.span("dist", "payload_route", track="payload_route",
+                  backend="shard_map", shards=n_shards):
+        mean_tree, ef_next = shard_map(
+            local_fn, mesh, in_specs=in_specs,
+            out_specs=(mean_specs, client_spec), check_rep=False,
+        )(key, grads, ef_chunks)
     if not use_ef:
         ef_next = None
 

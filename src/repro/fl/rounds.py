@@ -16,8 +16,8 @@ One ``run_rounds`` call plays ``n_rounds`` of
     6. the server updates its correlation tracker and temporal state
     7. the task advances                            (task.step)
 
-``spec`` may be a ``codec.Pipeline``, a bare sparsifier config, or the
-deprecated ``EstimatorSpec``. Heterogeneous budgets and error feedback
+``spec`` may be a ``codec.Pipeline`` or a bare sparsifier config.
+Heterogeneous budgets and error feedback
 compose on EVERY backend now: budget groups are decoded independently (the
 group's budget rides in each payload's meta), EF residual rows live per
 client in ``ClientState.ef`` and follow their own k_i.
@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import chunking, correlation
 from ..core.codec import ClientState, as_pipeline, with_staleness
 from ..dist import collectives
@@ -151,6 +152,20 @@ class History:
                 return int(b)
         return None
 
+    _RECORD_KEYS = ("metric", "mse", "mse_pop", "bytes", "n_survivors",
+                    "n_sampled", "n_stale", "stale_bytes", "intra_pod_bytes",
+                    "rho_hat")
+
+    def round_records(self) -> list:
+        """The trajectory as one dict per round (the ``--metrics-json``
+        export): every parallel History list keyed by name, plus the round
+        index — a flat schema consumers can load without knowing the
+        dataclass layout."""
+        return [
+            {"round": t, **{k: getattr(self, k)[t] for k in self._RECORD_KEYS}}
+            for t in range(len(self.mse))
+        ]
+
 
 def _should_track(pipe, cfg) -> bool:
     return cfg.track_r if cfg.track_r is not None else pipe.transform == "wavg"
@@ -172,20 +187,37 @@ def _group_local(pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate,
     the same slices/offsets as the shard_map ownership route, so the local
     backend exercises (and bit-matches) the sharded decode."""
     ids_j = jnp.asarray(ids_g)
+    # guard: payload_nbytes builds a PayloadMeta (disabled path stays free)
+    group_bytes = (
+        pipe_g.payload_nbytes(xs_chunks.shape[1]) * len(ids_g)
+        if obs.enabled() else 0
+    )
     if overlap:
         # stateless by construction (run_rounds validates): stream the chunk
-        # axis through the dist layer's double buffer — bit-identical
-        dec, _ = collectives.streamed_mean(
-            pipe_g, key, xs_chunks[ids_g], len(ids_g), client_ids=ids_j,
-            side_info=side, tile=overlap_tile, ownership=plan,
-        )
+        # axis through the dist layer's double buffer — bit-identical.
+        # Encode and decode interleave tile-by-tile inside streamed_mean, so
+        # the timeline gets ONE owner_decode span for the whole stream and a
+        # zero-duration client_encode marker carrying the group's ledger bytes
+        # (the byte invariant cares about attribution, not tile timing).
+        obs.marker("fl", "client_encode", track="client_encode",
+                   bytes=group_bytes, clients=len(ids_g), overlap=True)
+        _mark_quantize(pipe_g)
+        with obs.span("fl", "owner_decode", track="owner_decode",
+                      clients=len(ids_g), overlap=True):
+            dec, _ = collectives.streamed_mean(
+                pipe_g, key, xs_chunks[ids_g], len(ids_g), client_ids=ids_j,
+                side_info=side, tile=overlap_tile, ownership=plan,
+            )
         return dec, cstate, None
     st_g = None
     if cstate is not None:
         st_g = jax.tree.map(lambda a: a[ids_j], cstate)
-    payloads, st_new = pipe_g.encode_all(
-        key, xs_chunks[ids_g], client_ids=ids_j, side_info=side, states=st_g
-    )
+    with obs.span("fl", "client_encode", track="client_encode",
+                  bytes=group_bytes, clients=len(ids_g), k=pipe_g.k):
+        payloads, st_new = pipe_g.encode_all(
+            key, xs_chunks[ids_g], client_ids=ids_j, side_info=side, states=st_g
+        )
+    _mark_quantize(pipe_g)
     if st_new is not None:
         cstate = _scatter_rows(cstate, st_new, ids_j)
     dec_side = side
@@ -193,17 +225,29 @@ def _group_local(pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate,
         # per-client temporal: the server adds back the SURVIVORS' mean
         # memory (its mirror of the clients' side information)
         dec_side = jnp.mean(mem_snapshot[ids_j], axis=0)
-    if plan is not None:
-        dec = collectives.sharded_decode(
-            pipe_g, key, payloads, len(ids_g), plan, client_ids=ids_j
-        )
-        if dec_side is not None:
-            dec = dec + dec_side
-    else:
-        dec = pipe_g.decode(
-            key, payloads, len(ids_g), client_ids=ids_j, side_info=dec_side
-        )
+    with obs.span("fl", "owner_decode", track="owner_decode",
+                  clients=len(ids_g), sharded=plan is not None):
+        if plan is not None:
+            dec = collectives.sharded_decode(
+                pipe_g, key, payloads, len(ids_g), plan, client_ids=ids_j
+            )
+            if dec_side is not None:
+                dec = dec + dec_side
+        else:
+            dec = pipe_g.decode(
+                key, payloads, len(ids_g), client_ids=ids_j, side_info=dec_side
+            )
     return dec, cstate, payloads
+
+
+def _mark_quantize(pipe_g):
+    """Attribution marker for the quantize stage: its walltime is fused into
+    the client encode (one vmapped program), so the timeline names the stage
+    with a zero-duration event instead of claiming a separate duration."""
+    if obs.enabled():
+        q = pipe_g.quantizer
+        obs.marker("fl", "quantize", track="quantize",
+                   stage="none" if q is None else q.name)
 
 
 def _ownership_arg(cfg):
@@ -247,6 +291,16 @@ def _group_dist(pipe_g, key, xs_chunks, ids_g, side, cstate, cfg):
     mean_g = mean_tree["x"]
     if side is not None:
         mean_g = mean_g + side
+    # the dist paths encode+route+decode inside one collectives call (and on
+    # shard_map inside one traced program), so the phases get attribution
+    # markers here — bytes off the collectives' exact ledger; walltime spans
+    # for the eager GSPMD path live in dist.collectives itself
+    obs.marker("fl", "client_encode", track="client_encode",
+               bytes=info["bytes_sent"], clients=len(ids_g),
+               backend=cfg.backend)
+    _mark_quantize(pipe_g)
+    obs.marker("fl", "owner_decode", track="owner_decode",
+               clients=len(ids_g), backend=cfg.backend)
     return mean_g, cstate, info["bytes_sent"], info["intra_pod_bytes"], delta
 
 
@@ -451,7 +505,7 @@ def _validate_cfg(pipe, cfg):
 def run_rounds(task: Task, spec, cohort: Cohort | None = None,
                cfg: RoundConfig = RoundConfig()):
     """Drive ``cfg.n_rounds`` federated rounds of ``task`` under ``spec`` (a
-    codec Pipeline, sparsifier config, or deprecated EstimatorSpec).
+    codec Pipeline or sparsifier config).
 
     Returns (final task state, History). The recorded per-round ``mse`` is
     against the SURVIVORS' true mean — the quantity the estimator actually
@@ -486,6 +540,11 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
     stale_buf: _StaleBuffer | None = None
 
     for t in range(cfg.n_rounds):
+        tr = obs.current_tracer()
+        if tr is not None:
+            tr.set_round(t)
+        round_span = obs.span("fl", "round", track="round")
+        rsp = round_span.__enter__()
         rkey = jax.random.fold_in(key, t)
         vecs = task.client_vectors(state, rkey)  # (n, dim)
         part = cohort.sample_round(cfg.seed, t)
@@ -496,27 +555,34 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
             pipe, rkey, xs_chunks, part, cohort, state_srv, cfg, cstate,
             side, mem_snapshot,
         )
+        # intra-pod traffic is a modelled server-side quantity, deliberately
+        # keyed ``bytes_intra_pod`` so it never enters the wire-ledger sum
+        obs.marker("fl", "payload_route", track="payload_route",
+                   bytes_intra_pod=intra_pod, backend=cfg.backend)
 
         # ---- staleness-1 admission: last round's late payloads land now.
         # EVERY arrival is ledgered (it crossed the wire), but a client that
         # ALSO reported fresh this round supersedes its own stale payload —
         # the fresh one carries strictly newer information, so only the
         # non-superseded set enters the decode.
-        n_stale, stale_nbytes = 0, 0
-        if cfg.async_rounds and stale_buf is not None and cfg.staleness >= 1:
-            stale_nbytes = _stale_arrival_bytes(pipe, stale_buf, cohort,
-                                                n_chunks)
-            nbytes += stale_nbytes
-            admit = np.setdiff1d(stale_buf.ids, part.survivors)
-            if len(admit):
-                stale_mean = _decode_stale(
-                    pipe, stale_buf, admit, cohort, state_srv
-                )
-                n_stale = len(admit)
-                mean_chunks = server_lib.admit_stale(
-                    mean_chunks, part.n_survivors, stale_mean, n_stale,
-                    cfg.stale_weight,
-                )
+        with obs.span("fl", "stale_admission", track="stale_admission") as ssp:
+            n_stale, stale_nbytes = 0, 0
+            if cfg.async_rounds and stale_buf is not None and cfg.staleness >= 1:
+                stale_nbytes = _stale_arrival_bytes(pipe, stale_buf, cohort,
+                                                    n_chunks)
+                nbytes += stale_nbytes
+                admit = np.setdiff1d(stale_buf.ids, part.survivors)
+                if len(admit):
+                    stale_mean = _decode_stale(
+                        pipe, stale_buf, admit, cohort, state_srv
+                    )
+                    n_stale = len(admit)
+                    mean_chunks = server_lib.admit_stale(
+                        mean_chunks, part.n_survivors, stale_mean, n_stale,
+                        cfg.stale_weight,
+                    )
+            ssp["bytes"] = stale_nbytes
+            ssp["admitted"] = n_stale
 
         # ---- this round's stragglers encode NOW (overlapping the server's
         # decode above); buffer their encode inputs for admission at t+1.
@@ -549,12 +615,21 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
         hist.intra_pod_bytes.append(int(intra_pod))
         hist.rho_hat.append(float("nan") if rho_round is None else rho_round)
 
-        server_lib.commit_round(state_srv, mean_chunks)
+        with obs.span("fl", "temporal_update", track="temporal_update",
+                      temporal=bool(cfg.temporal or pipe.temporal_stage)):
+            server_lib.commit_round(state_srv, mean_chunks)
         mean = chunking.unchunk(mean_chunks, task.dim)
         state = task.step(state, mean)
         hist.metric.append(
             float("nan") if task.metric is None else task.metric(state)
         )
+        rsp["mse"] = hist.mse[-1]
+        rsp["wire_bytes"] = nbytes
+        rsp["survivors"] = part.n_survivors
+        round_span.__exit__(None, None, None)
 
+    tr = obs.current_tracer()
+    if tr is not None:
+        tr.set_round(None)
     hist.client_state = cstate
     return state, hist

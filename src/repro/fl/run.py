@@ -26,9 +26,12 @@ estimator family.
 from __future__ import annotations
 
 import argparse
+import json
+import math
 
 import numpy as np
 
+from .. import obs
 from ..core import codec
 from . import rounds as rounds_lib
 from .clients import Cohort
@@ -115,6 +118,19 @@ def build_parser() -> argparse.ArgumentParser:
                     help="run the rand_k/rand_k_spatial/rand_proj_spatial family")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes + 3 rounds; CI entry-point guard")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto round timeline here "
+                         "(one track per phase, byte/MSE annotations off the "
+                         "exact ledger; open at https://ui.perfetto.dev — "
+                         "docs/OBSERVABILITY.md)")
+    ap.add_argument("--metrics-json", dest="metrics_json", default=None,
+                    metavar="PATH",
+                    help="write the metrics-registry snapshot + per-round "
+                         "History records as JSON (schema_version 1)")
+    ap.add_argument("--profile-dir", dest="profile_dir", default=None,
+                    metavar="DIR",
+                    help="wrap the run in a jax.profiler trace (device-level "
+                         "XLA view, complements --trace's system view)")
     return ap
 
 
@@ -193,27 +209,94 @@ def report(task, spec, hist, verbose=True):
     return mean_mse
 
 
+def _nan_to_none(obj):
+    """NaN -> null so the exported JSON stays strict-parser friendly."""
+    if isinstance(obj, float) and math.isnan(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: _nan_to_none(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_nan_to_none(v) for v in obj]
+    return obj
+
+
+def _run_meta(args, runs) -> dict:
+    """Run metadata + ledger totals shared by the trace file and the metrics
+    export — what tools/trace_report.py validates the trace events against.
+    ``runs``: [(estimator label, History), ...] (several under --compare)."""
+    import jax
+
+    return {
+        "task": args.task,
+        "estimators": [label for label, _ in runs],
+        "backend": args.backend,
+        "seed": args.seed,
+        "n_rounds": sum(len(h.mse) for _, h in runs),
+        "ledger_total_bytes": sum(h.total_bytes for _, h in runs),
+        "ledger_stale_bytes": sum(h.total_stale_bytes for _, h in runs),
+        "ledger_intra_pod_bytes": sum(h.total_intra_pod_bytes for _, h in runs),
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+    }
+
+
+def _write_obs_outputs(args, tracer, runs) -> None:
+    if not runs or not (args.trace or args.metrics_json):
+        return
+    meta = _run_meta(args, runs)
+    if tracer is not None:
+        for mk, mv in meta.items():
+            tracer.set_meta(mk, mv)
+        tracer.write(args.trace)
+        obs.uninstall_tracer()
+        print(f"trace: {args.trace}  (open at https://ui.perfetto.dev)")
+    if args.metrics_json:
+        out = {
+            "schema_version": 1,
+            "run": meta,
+            "metrics": obs.snapshot(),
+            "rounds": {label: h.round_records() for label, h in runs},
+        }
+        with open(args.metrics_json, "w") as f:
+            json.dump(_nan_to_none(out), f, indent=1)
+        print(f"metrics: {args.metrics_json}")
+
+
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     task = make_task(args)
 
-    if args.compare:
-        results = {}
-        for name, kw in COMPARE:
-            spec, _, hist = run_one(task, args, name, kw)
-            results[f"{name}({kw.get('transform', '-')})"] = (
-                report(task, spec, hist, verbose=False), hist.total_bytes
-            )
-        print("\nMSE at equal bytes (same k, same round keys):")
-        for label, (mse, b) in sorted(results.items(), key=lambda kv: kv[1][0]):
-            print(f"  {label:28s} mean_mse={mse:.6f}  bytes={b}")
-        return 0
+    tracer = None
+    if args.trace or args.metrics_json:
+        obs.enable()
+    if args.trace:
+        tracer = obs.install_tracer(obs.Tracer())
 
-    est_kw = {"transform": args.transform}
-    spec, state, hist = run_one(task, args, args.estimator, est_kw)
-    report(task, spec, hist, verbose=not args.smoke)
-    if "accuracy" in task.aux:
-        print(f"  final accuracy: {task.aux['accuracy'](state):.4f}")
+    runs = []
+    with obs.profiler_session(args.profile_dir):
+        if args.compare:
+            # under --trace the runs share one timeline: events accumulate
+            # across estimators and the metadata ledger sums all of them
+            results = {}
+            for name, kw in COMPARE:
+                spec, _, hist = run_one(task, args, name, kw)
+                runs.append((name, hist))
+                results[f"{name}({kw.get('transform', '-')})"] = (
+                    report(task, spec, hist, verbose=False), hist.total_bytes
+                )
+            print("\nMSE at equal bytes (same k, same round keys):")
+            for label, (mse, b) in sorted(results.items(),
+                                          key=lambda kv: kv[1][0]):
+                print(f"  {label:28s} mean_mse={mse:.6f}  bytes={b}")
+        else:
+            est_kw = {"transform": args.transform}
+            spec, state, hist = run_one(task, args, args.estimator, est_kw)
+            runs.append((args.estimator, hist))
+            report(task, spec, hist, verbose=not args.smoke)
+            if "accuracy" in task.aux:
+                print(f"  final accuracy: {task.aux['accuracy'](state):.4f}")
+
+    _write_obs_outputs(args, tracer, runs)
     return 0
 
 

@@ -25,6 +25,7 @@ import numpy as np
 
 from . import ref as _ref
 from .fwht import fwht_pallas
+from ..obs import record_dispatch as _record_dispatch
 
 # interpret-mode execution is pure-python per grid step; for the small chunk
 # sizes used on CPU the vectorised oracle is much faster. The Pallas path is
@@ -47,12 +48,23 @@ def _should_use_pallas(n_elems: int, use_pallas: str | bool) -> tuple[bool, bool
     return n_elems >= _PALLAS_MIN_ELEMS, True
 
 
+def _dispatch(op: str, n_elems: int, use_pallas: str | bool) -> tuple[bool, bool]:
+    """``_should_use_pallas`` + one telemetry count per decision.
+
+    The decision is a Python static, so under jit it records at trace time —
+    i.e. once per compilation, which is exactly the granularity at which the
+    route is actually chosen."""
+    use, interp = _should_use_pallas(n_elems, use_pallas)
+    _record_dispatch(op, use, interp)
+    return use, interp
+
+
 def fwht(x: jnp.ndarray, *, scale: float = 1.0, use_pallas: str | bool = "auto") -> jnp.ndarray:
     """``scale * H_d @ x`` along the last axis; x: (..., d)."""
     d = x.shape[-1]
     lead = x.shape[:-1]
     x2 = x.reshape(-1, d)
-    use, interp = _should_use_pallas(x2.size, use_pallas)
+    use, interp = _dispatch("fwht", x2.size, use_pallas)
     if use:
         out = fwht_pallas(x2, with_signs=False, scale=scale, interpret=interp)
     else:
@@ -78,7 +90,7 @@ def srht_encode(
     d = x.shape[-1]
     lead = x.shape[:-1]
     x2 = x.reshape(-1, d)
-    use, interp = _should_use_pallas(x2.size, use_pallas)
+    use, interp = _dispatch("srht_encode", x2.size, use_pallas)
     inv = 1.0 / math.sqrt(d)
     if use:
         t = fwht_pallas(x2, signs, with_signs=True, scale=inv, interpret=interp)
@@ -105,7 +117,7 @@ def srht_decode(
     u2 = u.reshape(-1, k)
     full = jnp.zeros((u2.shape[0], d), u2.dtype)
     full = full.at[:, rows].set(u2)
-    use, interp = _should_use_pallas(full.size, use_pallas)
+    use, interp = _dispatch("srht_decode", full.size, use_pallas)
     inv = 1.0 / math.sqrt(d)
     if use:
         t = fwht_pallas(full, with_signs=False, scale=inv, interpret=interp)
@@ -125,7 +137,7 @@ def flash_attention(q, k, v, *, rep: int, window: int = 0, q_offset: int = 0,
     """
     from .flash_attention import flash_attention_pallas
 
-    use, interp = _should_use_pallas(q.size, use_pallas)
+    use, interp = _dispatch("flash_attention", q.size, use_pallas)
     if use_pallas == "force" or (use and _on_tpu()):
         return flash_attention_pallas(
             q, k, v, rep=rep, window=window, q_offset=q_offset,
@@ -156,7 +168,7 @@ def srht_encode_batch(
     lead = x.shape[:-1]
     x2 = x.reshape(-1, d)
     s2 = jnp.broadcast_to(signs, x.shape).reshape(-1, d)
-    use, interp = _should_use_pallas(x2.size, use_pallas)
+    use, interp = _dispatch("srht_encode_batch", x2.size, use_pallas)
     inv = 1.0 / math.sqrt(d)
     if use:
         t = fwht_rowsigns_pallas(x2, s2, sign_pre=True, scale=inv, interpret=interp)
@@ -186,7 +198,7 @@ def srht_decode_sum(
     from .srht_fused import srht_decode_sum_pallas
 
     full = _ref.srht_scatter_ref(z, rows, d)  # (n, C, d)
-    use, interp = _should_use_pallas(full.size, use_pallas)
+    use, interp = _dispatch("srht_decode_sum", full.size, use_pallas)
     inv = 1.0 / math.sqrt(d)
     if use:
         return srht_decode_sum_pallas(full, signs, scale=inv, interpret=interp)
@@ -211,7 +223,7 @@ def srht_gram_apply(
 
     n = signs.shape[0]
     d = v.shape[-1]
-    use, interp = _should_use_pallas(n * v.shape[0] * d, use_pallas)
+    use, interp = _dispatch("srht_gram_apply", n * v.shape[0] * d, use_pallas)
     if use:
         return srht_gram_apply_pallas(v, signs, mask, scale=1.0 / d, interpret=interp)
     return _ref.srht_gram_apply_ref(v, signs, mask)

@@ -1,0 +1,83 @@
+"""Profiling hooks: ``jax.profiler`` session wiring + kernel telemetry.
+
+Two kinds of hook live here, both no-ops unless explicitly requested:
+
+- ``profiler_session(logdir)``: context manager around
+  ``jax.profiler.start_trace`` / ``stop_trace``. The resulting TensorBoard/
+  Perfetto-XL profile is the *device*-level view (XLA ops, fusion, HBM);
+  the ``repro.obs.trace`` round tracer is the *system*-level view (phases,
+  bytes). Wired to ``repro.fl.run --profile-dir``. Degrades to a plain
+  pass-through (with one warning) where the profiler is unavailable —
+  profiling is observability, never a hard dependency.
+
+- kernel-dispatch telemetry: ``record_dispatch`` (which route
+  ``kernels.ops._should_use_pallas`` took per op), ``record_decode_route``
+  (fused / gram / direct per rand_proj_spatial decode), and
+  ``record_cg_iters`` (iterations the fused resolvent CG actually ran).
+  Dispatch decisions are Python-level statics, so they record under jit
+  (once per trace — i.e. per compilation); CG iterations are data-dependent
+  and therefore recorded only on eager executions (under jit the sample is
+  a tracer and the registry drops it — the tracer-safety contract).
+"""
+from __future__ import annotations
+
+import contextlib
+import warnings
+
+from . import registry
+
+
+@contextlib.contextmanager
+def profiler_session(logdir: str | None):
+    """Wrap a block in a ``jax.profiler`` trace writing to ``logdir``; a
+    None logdir (or an unavailable profiler) is a pass-through."""
+    if logdir is None:
+        yield
+        return
+    import jax
+
+    try:
+        jax.profiler.start_trace(logdir)
+    except Exception as e:  # profiler backends vary by install
+        warnings.warn(f"jax.profiler unavailable ({e}); continuing unprofiled")
+        yield
+        return
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+
+
+def record_dispatch(op: str, use_kernel: bool, interpret: bool) -> None:
+    """Count one ``_should_use_pallas`` decision for ``op``."""
+    if not registry.enabled():
+        return
+    route = ("pallas_interpret" if use_kernel and interpret
+             else "pallas" if use_kernel else "oracle")
+    registry.count("kernels", "dispatch", op=op, route=route)
+
+
+def record_decode_route(estimator: str, method: str) -> None:
+    """Count the decode path a spatial estimator resolved to."""
+    if not registry.enabled():
+        return
+    registry.count("kernels", "decode_route", estimator=estimator,
+                   method=method)
+
+
+def record_cg_iters(iters) -> None:
+    """Histogram sample of the fused resolvent solve's CG iteration count
+    (dropped when ``iters`` is a jit tracer)."""
+    if not registry.enabled():
+        return
+    registry.observe("kernels", "cg_iters", iters)
+
+
+def record_compile(component: str, name: str, compile_s: float,
+                   steady_s: float) -> None:
+    """Gauge pair from ``benchmarks.common.timed_with_compile``: first-call
+    (trace + lower + compile) vs steady-state seconds for a jitted fn."""
+    if not registry.enabled():
+        return
+    registry.gauge(component, f"{name}.compile_us", compile_s * 1e6)
+    registry.gauge(component, f"{name}.steady_us", steady_s * 1e6)

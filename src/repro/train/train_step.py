@@ -4,7 +4,7 @@ optimizer.
 Two modes:
   - dme_spec=None: standard GSPMD step; gradient reduction over all DP axes
     is the implicit (uncompressed) all-reduce. This is the roofline BASELINE.
-  - dme_spec=<codec Pipeline | sparsifier config | legacy EstimatorSpec>:
+  - dme_spec=<codec Pipeline | sparsifier config>:
     the batch carries a leading client axis (sharded over `client_axes`,
     default the 'pod' mesh axis). Per-client grads come from vmap (no
     cross-client reduction is ever materialised); the cross-client mean is

@@ -1,5 +1,5 @@
 """The codec pipeline API (ISSUE 3): ledger honesty, stage-composition
-unbiasedness, the EstimatorSpec deprecation shim, true per-client
+unbiasedness, the legacy flat-keyword construction surface, true per-client
 Rand-k-Temporal, and error feedback under heterogeneous budgets."""
 import warnings
 
@@ -114,60 +114,58 @@ def test_pipeline_int8_composition_stays_unbiased(sp, with_side):
     assert (err < 6 * sem + 6e-3).all(), float(err.max())
 
 
-# ------------------------------------------------------------------- shim
+# --------------------------------------------- legacy construction surface
 
 
-@pytest.fixture
-def fresh_shim_latch():
-    """Reset the warn-once latch before AND after: these tests legitimately
-    trip it, and leaving it set would let a stray first-party EstimatorSpec
-    construction later in the suite escape -W error::DeprecationWarning (the
-    CI `deprecations` job's whole point)."""
-    est_base._reset_deprecation_warning_for_tests()
-    yield
-    est_base._reset_deprecation_warning_for_tests()
+def test_estimator_spec_is_gone():
+    """The deprecated flat EstimatorSpec shim was removed: the class no
+    longer exists anywhere on the public surface, and as_pipeline's error
+    for spec-shaped strangers points at codec.build."""
+    import repro.core
+    import repro.core.estimators
+
+    assert not hasattr(est_base, "EstimatorSpec")
+    assert not hasattr(repro.core, "EstimatorSpec")
+    assert not hasattr(repro.core.estimators, "EstimatorSpec")
+    assert not hasattr(codec, "spec_to_pipeline")
+    with pytest.raises(TypeError, match="expected Pipeline or sparsifier"):
+        codec.as_pipeline(object())
 
 
-def test_estimator_spec_shim_warns_once_and_converts(fresh_shim_latch):
-    with pytest.warns(DeprecationWarning, match="EstimatorSpec is deprecated"):
-        spec = est_base.EstimatorSpec(name="rand_proj_spatial", k=8, d_block=D,
-                                      payload_dtype="int8", ef=True)
-    # exactly once per process: the second construction is silent
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        spec2 = est_base.EstimatorSpec(name="rand_k", k=4, d_block=D)
-    pipe = codec.as_pipeline(spec)
+def test_build_covers_old_flat_keywords():
+    """codec.build is the keyword-compatible successor: the old flat spec
+    fields (payload_dtype, ef, wangni_capacity, induced_topk_frac, renames)
+    all land on the right typed stage configs."""
+    pipe = codec.build("rand_proj_spatial", k=8, d_block=D,
+                       payload_dtype="int8", ef=True)
     assert pipe.name == "rand_proj_spatial" and pipe.has_ef
     assert isinstance(pipe.quantizer, codec.Int8Quant)
-    # field renames: the old cross-cutting names map onto the typed configs
-    pw = codec.as_pipeline(
-        est_base.EstimatorSpec(name="wangni", k=8, d_block=D,
-                               wangni_capacity=2.0)
-    )
+    pw = codec.build("wangni", k=8, d_block=D, wangni_capacity=2.0)
     assert pw.sparsifier.capacity == 2.0
-    pi = codec.as_pipeline(
-        est_base.EstimatorSpec(name="induced", k=8, d_block=D,
-                               induced_topk_frac=0.25)
-    )
+    pi = codec.build("induced", k=8, d_block=D, induced_topk_frac=0.25)
     assert pi.sparsifier.topk_frac == 0.25
-    assert codec.as_pipeline(spec2).name == "rand_k"
+    # first-party construction never warns (nothing deprecated left to trip)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        codec.build("rand_k", k=4, d_block=D)
 
 
-def test_shim_numeric_parity_with_pipeline(fresh_shim_latch):
-    """Old flat spec and the converted pipeline produce IDENTICAL payloads
-    and decodes for the same key (the int8 salts and key derivation moved
-    unchanged)."""
+def test_build_numeric_parity_with_explicit_pipeline():
+    """build(...) and the hand-composed Pipeline produce IDENTICAL payloads
+    and decodes for the same key (key derivation and int8 salts agree)."""
     xs = _xs()
     key = jax.random.key(5)
-    for kw in (dict(), dict(payload_dtype="int8"), dict(payload_dtype="bfloat16")):
-        # deliberate deprecated construction: suppress the warning locally so
-        # this test is order-independent under -W error::DeprecationWarning
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            spec = est_base.EstimatorSpec(name="rand_proj_spatial", k=8,
-                                          d_block=D, transform="avg", **kw)
-        a = est_base.mean_estimate(spec, key, xs)
-        b = codec.as_pipeline(spec).mean_estimate(key, xs)
+    for kw, stages in (
+        (dict(), []),
+        (dict(payload_dtype="int8"), [codec.Int8Quant()]),
+        (dict(payload_dtype="bfloat16"), [codec.Bf16Quant()]),
+    ):
+        built = codec.build("rand_proj_spatial", k=8, d_block=D,
+                            transform="avg", **kw)
+        sp = codec.RandProjSpatial(k=8, d_block=D, transform="avg")
+        pipe = codec.Pipeline([sp] + stages)
+        a = built.mean_estimate(key, xs)
+        b = pipe.mean_estimate(key, xs)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Benchmark-artifact post-processing for CI (schema v1).
+
+    python tools/bench_artifacts.py extract ownership results/BENCH_smoke.json
+    python tools/bench_artifacts.py extract kernels   results/BENCH_smoke.json
+    python tools/bench_artifacts.py validate results/*.json
+
+``extract`` pulls one benchmark section out of a full BENCH artifact into
+its own derived artifact (OWNERSHIP_<mode>.json / KERNELS_<mode>.json),
+carrying the parent's schema stamp and run metadata forward so a derived
+artifact is self-describing. The ``kernels`` extraction also enforces the
+fused-decode perf gate: every ``kernel_fused/...​/fused`` row must beat its
+``/unfused`` sibling, or the exit code is non-zero — a perf regression in
+kernels/srht_fused.py or its dispatch fails CI here first.
+
+``validate`` is the upload gate: every artifact CI archives must carry
+``schema_version`` (currently 1), the ``run`` metadata stamp
+(benchmarks.run.run_metadata — jax version/backend at minimum), and a
+non-empty ``rows`` list with ``name``/``us_per_call`` fields. Schema-less
+or metadata-less artifacts fail the job instead of uploading silently.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+SCHEMA_VERSION = 1
+_REQUIRED_RUN_KEYS = ("jax_version", "jax_backend")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fail(msg: str) -> "NoReturn":  # noqa: F821 - py3.10 typing comment only
+    print(f"bench_artifacts: FAIL: {msg}", file=sys.stderr)
+    raise SystemExit(1)
+
+
+def validate_doc(doc: dict, path: str) -> None:
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        _fail(f"{path}: schema_version={doc.get('schema_version')!r}, "
+              f"want {SCHEMA_VERSION} (re-run benchmarks.run to stamp it)")
+    run = doc.get("run")
+    if not isinstance(run, dict):
+        _fail(f"{path}: missing 'run' metadata stamp")
+    missing = [k for k in _REQUIRED_RUN_KEYS if not run.get(k)]
+    if missing:
+        _fail(f"{path}: run metadata missing {missing}")
+    rows = doc.get("rows")
+    if not rows:
+        _fail(f"{path}: empty or missing 'rows'")
+    for r in rows:
+        if "name" not in r or "us_per_call" not in r:
+            _fail(f"{path}: malformed row {r!r}")
+
+
+def _derived(doc: dict, rows: list) -> dict:
+    return {"schema_version": SCHEMA_VERSION, "mode": doc["mode"],
+            "run": doc["run"], "rows": rows}
+
+
+def extract_ownership(doc: dict, path: str) -> dict:
+    rows = [r for r in doc["rows"] if r["name"].startswith("ownership/")]
+    if not rows:
+        _fail(f"{path}: bench_systems.ownership produced no rows")
+    return _derived(doc, rows)
+
+
+def extract_kernels(doc: dict, path: str) -> dict:
+    rows = [r for r in doc["rows"] if r["name"].startswith("kernel_fused/")]
+    if not rows:
+        _fail(f"{path}: bench_systems.fused_kernels produced no rows")
+    by_name = {r["name"]: r["us_per_call"] for r in rows}
+    for name, us in by_name.items():
+        if not name.endswith("/fused"):
+            continue
+        sibling = name[: -len("/fused")] + "/unfused"
+        if sibling not in by_name:
+            _fail(f"{path}: missing unfused sibling for {name}")
+        if us >= by_name[sibling]:
+            _fail(f"fused decode regression: {name} {us:.1f}us >= "
+                  f"{sibling} {by_name[sibling]:.1f}us")
+    return _derived(doc, rows)
+
+
+_SECTIONS = {"ownership": (extract_ownership, "OWNERSHIP"),
+             "kernels": (extract_kernels, "KERNELS")}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ex = sub.add_parser("extract", help="pull a section into its own artifact")
+    ex.add_argument("section", choices=sorted(_SECTIONS))
+    ex.add_argument("bench_json")
+    ex.add_argument("--out", default=None,
+                    help="output path (default: <dir>/<SECTION>_<mode>.json)")
+    va = sub.add_parser("validate", help="schema/metadata gate before upload")
+    va.add_argument("paths", nargs="+")
+    args = ap.parse_args()
+
+    if args.cmd == "extract":
+        doc = _load(args.bench_json)
+        validate_doc(doc, args.bench_json)
+        fn, stem = _SECTIONS[args.section]
+        out_doc = fn(doc, args.bench_json)
+        out = args.out or os.path.join(os.path.dirname(args.bench_json),
+                                       f"{stem}_{doc['mode']}.json")
+        with open(out, "w") as f:
+            json.dump(out_doc, f, indent=1)
+        print(f"bench_artifacts: {args.section}: {len(out_doc['rows'])} rows -> {out}")
+    else:
+        for path in args.paths:
+            validate_doc(_load(path), path)
+            print(f"bench_artifacts: OK {path}")
+
+
+if __name__ == "__main__":
+    main()

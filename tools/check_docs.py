@@ -13,8 +13,9 @@ match a heading in the target (GitHub slugification). External links
 ``DESIGN.md §N[.M]`` section-number reference in the checked files must
 also name a real ``## §N`` / ``### §N.M`` heading in docs/DESIGN.md.
 
-Snippet check: ```python fenced blocks in README.md, docs/DESIGN.md and
-docs/API.md are executed — cumulatively per file, in one subprocess with
+Snippet check: ```python fenced blocks in README.md and the docs/*.md
+reference set (SNIPPET_FILES) are executed — cumulatively per file, in one
+subprocess with
 ``PYTHONPATH=src`` — so documented quickstarts cannot rot. A block is
 exempted by putting ``<!-- docs-ci: skip -->`` on the line directly above
 its opening fence (for deliberately illustrative fragments).
@@ -34,7 +35,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 LINK_FILES = ["README.md", "ROADMAP.md"] + sorted(
     os.path.relpath(p, REPO) for p in glob.glob(os.path.join(REPO, "docs", "*.md"))
 )
-SNIPPET_FILES = ["README.md", "docs/DESIGN.md", "docs/API.md", "docs/KERNELS.md"]
+SNIPPET_FILES = ["README.md", "docs/DESIGN.md", "docs/API.md", "docs/KERNELS.md",
+                 "docs/OBSERVABILITY.md"]
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)

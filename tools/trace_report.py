@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""Trace CI gate: structural + ledger validation of a --trace JSON file.
+
+    PYTHONPATH=src python -m repro.fl.run --task drift --smoke --trace t.json
+    python tools/trace_report.py t.json
+
+Asserts, against the Chrome-trace file the FL driver emitted
+(src/repro/obs/trace.py documents the track layout):
+
+1. The file is Perfetto-loadable Chrome Trace Event Format: a
+   ``traceEvents`` list of ``ph: "X"|"M"|"C"`` events plus a ``metadata``
+   object, every phase track named via ``thread_name`` metadata.
+2. Every canonical round-phase track (``repro.obs.PHASES``) is present.
+3. The ``round`` track carries exactly ``metadata.n_rounds`` spans, and
+   every phase track has >= 1 event for every distinct round tag (each
+   round's timeline is complete even when a phase is inactive — inactive
+   phases emit zero-byte / zero-duration markers by contract).
+4. THE LEDGER INVARIANT: the sum of ``args["bytes"]`` over all events
+   equals ``metadata.ledger_total_bytes`` (History.total_bytes summed over
+   the traced runs) EXACTLY — no float slack. ``bytes`` rides only on
+   client_encode and stale_admission events; payload_route's modelled
+   traffic uses ``bytes_intra_pod`` and the round summary uses
+   ``wire_bytes`` precisely so this sum stays honest.
+
+Exit code is non-zero on any violation, with a per-check report.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# keep in sync with src/repro/obs/trace.py (tools/ must run without
+# PYTHONPATH=src in the docs job, so the canonical tuple is mirrored here
+# and cross-checked against repro.obs when importable)
+PHASES = (
+    "round",
+    "client_encode",
+    "quantize",
+    "payload_route",
+    "owner_decode",
+    "stale_admission",
+    "temporal_update",
+)
+
+
+def _check_phases_in_sync() -> None:
+    try:
+        from repro.obs import PHASES as lib_phases
+    except ImportError:
+        return
+    assert tuple(lib_phases) == PHASES, (
+        f"tools/trace_report.py PHASES out of sync with repro.obs: "
+        f"{lib_phases} != {PHASES}")
+
+
+def report(doc: dict) -> list[str]:
+    """Validate one trace document; returns a list of failure strings."""
+    fails: list[str] = []
+    events = doc.get("traceEvents")
+    meta = doc.get("metadata")
+    if not isinstance(events, list) or not isinstance(meta, dict):
+        return ["not a Chrome-trace file: need traceEvents list + metadata obj"]
+
+    ok_ph = {"X", "M", "C"}
+    bad = [e for e in events if e.get("ph") not in ok_ph]
+    if bad:
+        fails.append(f"{len(bad)} events with unexpected ph (first: {bad[0]!r})")
+
+    # track names come from thread_name metadata events
+    tracks = {e["tid"]: e["args"]["name"] for e in events
+              if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    spans = [e for e in events if e.get("ph") == "X"]
+    by_track: dict[str, list[dict]] = {}
+    for e in spans:
+        by_track.setdefault(tracks.get(e["tid"], f"tid{e['tid']}"), []).append(e)
+
+    missing = [p for p in PHASES if p not in by_track]
+    if missing:
+        fails.append(f"missing phase tracks: {missing} (have {sorted(by_track)})")
+
+    n_rounds = meta.get("n_rounds")
+    if not isinstance(n_rounds, int) or n_rounds <= 0:
+        fails.append(f"metadata.n_rounds missing/invalid: {n_rounds!r}")
+    else:
+        got = len(by_track.get("round", []))
+        if got != n_rounds:
+            fails.append(f"round track has {got} spans, metadata says {n_rounds}")
+
+    # one event per phase per distinct round tag (repeated tags are fine:
+    # --compare runs share the timeline, each tagging its own rounds 0..T-1)
+    round_tags = sorted({e["args"].get("round") for e in spans
+                         if e["args"].get("round") is not None})
+    if not round_tags:
+        fails.append("no events carry a round tag")
+    for phase in PHASES:
+        tagged = {e["args"].get("round") for e in by_track.get(phase, [])}
+        holes = [t for t in round_tags if t not in tagged]
+        if holes and phase in by_track:
+            fails.append(f"phase {phase!r} has no event for round(s) {holes}")
+
+    # the ledger invariant — exact integer equality
+    traced = sum(e["args"]["bytes"] for e in spans if "bytes" in e["args"])
+    ledger = meta.get("ledger_total_bytes")
+    if ledger is None:
+        fails.append("metadata.ledger_total_bytes missing")
+    elif int(traced) != int(ledger) or traced != int(traced):
+        fails.append(f"byte-ledger mismatch: trace sums {traced}, "
+                     f"History.total_bytes says {ledger}")
+
+    # bytes must ride only on the two wire-crossing tracks
+    offenders = sorted({tracks.get(e["tid"], "?") for e in spans
+                        if "bytes" in e["args"]
+                        and tracks.get(e["tid"]) not in
+                        ("client_encode", "stale_admission")})
+    if offenders:
+        fails.append(f"'bytes' arg on non-wire tracks {offenders} "
+                     "(would double-count the ledger)")
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace_json")
+    args = ap.parse_args()
+    _check_phases_in_sync()
+    with open(args.trace_json) as f:
+        doc = json.load(f)
+    fails = report(doc)
+    n = len([e for e in doc.get("traceEvents", []) if e.get("ph") == "X"])
+    if fails:
+        for msg in fails:
+            print(f"trace_report: FAIL: {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    meta = doc["metadata"]
+    print(f"trace_report: OK {args.trace_json}: {n} spans, "
+          f"{meta['n_rounds']} rounds, "
+          f"{meta['ledger_total_bytes']} ledgered bytes (exact)")
+
+
+if __name__ == "__main__":
+    main()
