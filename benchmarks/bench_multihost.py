@@ -1,0 +1,154 @@
+"""Multi-host hierarchical aggregation benchmark (docs/DESIGN.md §11).
+
+    PYTHONPATH=src python -m benchmarks.bench_multihost --smoke
+
+Spawns 2 REAL CPU processes via ``runtime.spawn_local`` (each decoding its
+owned pod, exchanging per-pod records over the jax.distributed KV store)
+and measures the hierarchical round driver under actual multi-process
+execution: the base two-pod decode, the PR 4 ``overlap=`` double-buffered
+chunk streaming, and the PR 5 ownership (all_to_all-routed) sub-decode
+inside each pod. The ``dcn`` row reports the two-tier ledger in the
+n·k > d regime the hierarchy exists for: per-round DCN bytes of the
+hierarchical exchange vs the modelled flat all-payloads-to-one-server
+uplink (``runtime.comms.cross_pod_traffic``), which the hierarchy must not
+exceed.
+
+Writes ``results/MULTIHOST_<mode>.json`` (benchmark artifact schema v1,
+validated by ``tools/bench_artifacts.py validate`` before CI uploads it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+N_PROCESSES = 2
+
+
+def _base_spec(n_rounds: int) -> dict:
+    return dict(
+        task="drift",
+        task_kw=dict(n_clients=8, d=128, rho=0.9, omega=0.05,
+                     client_bias=0.5),
+        stages=[("rand_proj_spatial", dict(k=16, d_block=64,
+                                           transform="wavg"))],
+        cohort=dict(n_clients=8),
+        rounds=dict(n_rounds=n_rounds, hierarchy="hier", pods=2),
+    )
+
+
+def _nk_gt_d_spec(n_rounds: int) -> dict:
+    """n·k = 1024 payload floats vs d = 128: the regime where shipping every
+    payload to one server costs more DCN than exchanging pod estimates."""
+    return dict(
+        task="drift",
+        task_kw=dict(n_clients=16, d=128, rho=0.9, omega=0.05,
+                     client_bias=0.5),
+        stages=[("rand_proj_spatial", dict(k=64, d_block=128,
+                                           transform="avg"))],
+        cohort=dict(n_clients=16),
+        rounds=dict(n_rounds=n_rounds, hierarchy="hier", pods=2),
+    )
+
+
+def _spawn(spec: dict) -> dict:
+    """Run the spec on N_PROCESSES real processes; return the slowest
+    process's result (the round wall time the deployment would see)."""
+    from repro.runtime import spawn_local
+    from repro.runtime.workers import round_worker
+
+    outs = spawn_local(round_worker, N_PROCESSES, args=(spec,))
+    return max(outs, key=lambda o: o["wall_s"])
+
+
+def _row(out: list[str], name: str, spec: dict, result: dict,
+         derived: str = "") -> None:
+    n_rounds = spec["rounds"]["n_rounds"]
+    us = result["wall_s"] / n_rounds * 1e6
+    extra = (f"bytes_per_round={int(result['total_bytes']) // n_rounds};"
+             f"dcn_per_round={int(result['total_dcn_bytes']) // n_rounds}")
+    out.append(f"{name},{us:.1f},{derived + extra}")
+
+
+def run(out: list[str], n_rounds: int = 3) -> None:
+    import numpy as np
+
+    from repro.fl import Cohort
+    from repro.runtime import PodPlan, cross_pod_traffic
+    from repro.runtime.workers import build_pipeline
+
+    base = _base_spec(n_rounds)
+    _row(out, f"multihost/p{N_PROCESSES}_pods2/base", base, _spawn(base))
+
+    overlap = dict(base, rounds=dict(base["rounds"], overlap=True))
+    _row(out, f"multihost/p{N_PROCESSES}_pods2/overlap", overlap,
+         _spawn(overlap))
+
+    owner = dict(base, rounds=dict(base["rounds"], ownership=True,
+                                   n_owners=2))
+    res_owner = _spawn(owner)
+    _row(out, f"multihost/p{N_PROCESSES}_pods2/ownership", owner, res_owner,
+         derived=f"intra_pod_per_round="
+                 f"{int(res_owner['total_intra_pod_bytes']) // n_rounds};")
+
+    # two-tier ledger in the n*k > d regime: real per-round DCN bytes vs the
+    # modelled flat uplink — the acceptance bound (hier <= flat)
+    big = _nk_gt_d_spec(n_rounds)
+    res_big = _spawn(big)
+    pipe = build_pipeline(big["stages"])
+    n = big["cohort"]["n_clients"]
+    info = cross_pod_traffic(pipe, Cohort(n_clients=n), np.arange(n),
+                             PodPlan(n_clients=n, n_pods=2), n_chunks=1)
+    dcn_round = int(res_big["total_dcn_bytes"]) // n_rounds
+    if dcn_round > info["dcn_bytes_flat"]:
+        raise SystemExit(
+            f"multihost: DCN regression: hier {dcn_round} B/round > flat "
+            f"{info['dcn_bytes_flat']} B/round in the n*k > d regime"
+        )
+    _row(out, f"multihost/p{N_PROCESSES}_pods2/dcn_nk_gt_d", big, res_big,
+         derived=f"dcn_flat_model={info['dcn_bytes_flat']};"
+                 f"dcn_hier_model={info['dcn_bytes_hier']};")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced rounds; writes results/MULTIHOST_smoke.json")
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="override round count (default 3 smoke / 10 full)")
+    args = ap.parse_args()
+    mode = "smoke" if args.smoke else "full"
+    n_rounds = args.rounds or (3 if args.smoke else 10)
+
+    out: list[str] = ["name,us_per_call,derived"]
+    t0 = time.time()
+    run(out, n_rounds=n_rounds)
+    secs = time.time() - t0
+    print("\n".join(out))
+
+    from benchmarks.run import run_metadata
+
+    records = []
+    for line in out[1:]:
+        name, us, derived = line.split(",", 2)
+        records.append({"name": name, "us_per_call": float(us),
+                        "derived": derived})
+    meta = run_metadata(mode)
+    meta["n_processes"] = N_PROCESSES
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"MULTIHOST_{mode}.json")
+    with open(path, "w") as f:
+        json.dump({"schema_version": 1, "mode": mode, "run": meta,
+                   "total_s": round(secs, 1), "rows": records}, f, indent=1)
+    print(f"# total {secs:.1f}s, {len(records)} rows -> {path}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

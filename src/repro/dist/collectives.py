@@ -739,3 +739,56 @@ def compressed_mean_tree_shardmap(spec, key, grads, mesh, param_pspecs=None,
 
     return mean_tree, _info(pipe, n_eff, d_flat, n_chunks, n_total=n,
                             n_shards=n_shards, plan=plan), ef_next
+
+
+def psum_scatter_mean(tiles, counts, mesh, axis: str = "pod"):
+    """Count-weighted mean of pre-placed per-pod tiles via ``psum_scatter``.
+
+    The cross-pod combine of the hierarchical decode (docs/DESIGN.md §11) as
+    a real device collective: ``tiles`` is (P, C, d_block) with row p — pod
+    p's decoded d-sized estimate — pre-placed on shard p of mesh ``axis``;
+    ``counts`` is (P,) contributing client counts (0 marks an absent pod, a
+    row whose values are then irrelevant). Each shard contributes
+    ``counts[p] * tiles[p]``, a ``psum_scatter`` reduces the weighted sum
+    while leaving each shard exactly 1/P of the chunk axis (DCN traffic
+    (P-1)/P of the naive all-reduce), and one ``all_gather`` of the
+    normalised slices replicates the mean:
+
+        sum_p counts[p] * tiles[p] / sum_p counts[p]    (C, d_block)
+
+    ``counts`` must sum to > 0. The chunk axis is padded to a multiple of P
+    internally. On a 1-shard mesh this degenerates to the weighted mean with
+    no collective traffic. The KV-store exchange in ``runtime.comms`` is the
+    CPU-backend equivalent of this combine (multiprocess XLA collectives are
+    unavailable there); on TPU/GPU meshes this is the fast path.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    n_shards = mesh.shape[axis]
+    tiles = jnp.asarray(tiles)
+    counts = jnp.asarray(counts, tiles.dtype)
+    if tiles.ndim != 3 or tiles.shape[0] != n_shards:
+        raise ValueError(
+            f"tiles must be (n_shards={n_shards}, C, d_block), got "
+            f"{tiles.shape}"
+        )
+    if counts.shape != (n_shards,):
+        raise ValueError(f"counts must be ({n_shards},), got {counts.shape}")
+    n_chunks = tiles.shape[1]
+    pad = (-n_chunks) % n_shards
+
+    def local_fn(tile, cnt):
+        contrib = cnt[0] * tile[0]  # (C, d_block), this shard's weighted row
+        if pad:
+            contrib = jnp.pad(contrib, ((0, pad), (0, 0)))
+        part = jax.lax.psum_scatter(contrib, axis, scatter_dimension=0,
+                                    tiled=True)
+        total = jax.lax.psum(cnt[0], axis)
+        full = jax.lax.all_gather(part / total, axis, axis=0, tiled=True)
+        return full[:n_chunks]
+
+    return shard_map(
+        local_fn, mesh,
+        in_specs=(P(axis, None, None), P(axis)),
+        out_specs=P(None, None), check_rep=False,
+    )(tiles, counts)

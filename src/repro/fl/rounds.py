@@ -67,7 +67,7 @@ from ..core import chunking, correlation
 from ..core.codec import ClientState, as_pipeline, with_staleness
 from ..dist import collectives
 from . import server as server_lib
-from .clients import Cohort
+from .clients import Cohort, Participation
 from .tasks import Task
 
 
@@ -91,6 +91,15 @@ class RoundConfig:
     # shard_map backend always uses the mesh client-axes extent (the
     # all_to_all routing must match the physical shards)
     n_owners: int = 0
+    # hierarchical (per-pod) aggregation, docs/DESIGN.md §11: "hier" decodes
+    # pod-local (each pod's server sees only its cohort, carries its own
+    # online R estimate) then combines d-sized estimates across pods.
+    # Bitwise identical to "flat" at pods=1.
+    hierarchy: str = "flat"     # flat | hier
+    pods: int = 1               # pod count under hierarchy="hier"
+    # runtime.RuntimeContext for multi-process execution (None = all pods
+    # decoded in this process; ignored under hierarchy="flat")
+    runtime: Any = None
 
 
 @dataclasses.dataclass
@@ -129,6 +138,10 @@ class History:
     # shards (dist.collectives.intra_pod_traffic): the column the sharded
     # decode (RoundConfig.ownership) must strictly reduce at n_shards >= 2
     intra_pod_bytes: list = dataclasses.field(default_factory=list)
+    # modelled cross-pod (DCN-tier) traffic of the hierarchical route
+    # (runtime.comms.cross_pod_traffic); all zeros under hierarchy="flat"
+    # or pods=1 — nothing crosses a pod boundary
+    dcn_bytes: list = dataclasses.field(default_factory=list)
     rho_hat: list = dataclasses.field(default_factory=list)  # tracker output (or nan)
     client_state: Any = None  # final stacked ClientState (None if stateless)
 
@@ -139,6 +152,10 @@ class History:
     @property
     def total_intra_pod_bytes(self) -> int:
         return int(np.sum(self.intra_pod_bytes)) if self.intra_pod_bytes else 0
+
+    @property
+    def total_dcn_bytes(self) -> int:
+        return int(np.sum(self.dcn_bytes)) if self.dcn_bytes else 0
 
     @property
     def total_stale_bytes(self) -> int:
@@ -154,7 +171,7 @@ class History:
 
     _RECORD_KEYS = ("metric", "mse", "mse_pop", "bytes", "n_survivors",
                     "n_sampled", "n_stale", "stale_bytes", "intra_pod_bytes",
-                    "rho_hat")
+                    "dcn_bytes", "rho_hat")
 
     def round_records(self) -> list:
         """The trajectory as one dict per round (the ``--metrics-json``
@@ -263,11 +280,26 @@ def _ownership_arg(cfg):
     return cfg.n_owners if cfg.n_owners else True
 
 
-def _group_dist(pipe_g, key, xs_chunks, ids_g, side, cstate, cfg):
+def _group_dist(pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate, cfg):
     """One budget group through dist.collectives (gspmd / shard_map).
 
+    Per-client temporal memories compose here the same way the stale decode
+    composes everywhere: the collectives move DELTAS (each client's chunk
+    rows minus its own memory row — the exact subtraction the local encode
+    performs), and the server mirrors the deterministic ClientState updates
+    by re-running ``encode_all`` on its side (same key / ids / side /
+    residual => identical payloads => identical memory and EF updates — the
+    ``_measure_rho_dist`` re-derivation argument). The collective's own
+    ``ef_next`` is ignored in that case: the mirror computes both new
+    buffers in one pass.
+
     Returns (group mean, updated state, bytes, intra-pod bytes, delta)."""
-    delta = xs_chunks if side is None else xs_chunks - side[None]
+    if mem_snapshot is not None:
+        delta = xs_chunks - mem_snapshot  # per-client side info, row-wise
+    elif side is not None:
+        delta = xs_chunks - side[None]
+    else:
+        delta = xs_chunks
     tree = {"x": delta}
     ef_arr = cstate.ef if (cstate is not None and pipe_g.has_ef) else None
     if cfg.backend == "shard_map":
@@ -286,10 +318,21 @@ def _group_dist(pipe_g, key, xs_chunks, ids_g, side, cstate, cfg):
             overlap=cfg.overlap, overlap_tile=cfg.overlap_tile,
             ownership=_ownership_arg(cfg),
         )
-    if ef_next is not None:
+    if mem_snapshot is not None:
+        # mirror the clients' deterministic state transition server-side
+        # (memory AND ef rows advance together inside encode_all)
+        ids_j = jnp.asarray(ids_g)
+        st_g = jax.tree.map(lambda a: a[ids_j], cstate)
+        _, st_new = pipe_g.encode_all(
+            key, xs_chunks[ids_g], client_ids=ids_j, states=st_g
+        )
+        cstate = _scatter_rows(cstate, st_new, ids_j)
+    elif ef_next is not None:
         cstate = ClientState(ef=ef_next, memory=cstate.memory)
     mean_g = mean_tree["x"]
-    if side is not None:
+    if mem_snapshot is not None:
+        mean_g = mean_g + jnp.mean(mem_snapshot[jnp.asarray(ids_g)], axis=0)
+    elif side is not None:
         mean_g = mean_g + side
     # the dist paths encode+route+decode inside one collectives call (and on
     # shard_map inside one traced program), so the phases get attribution
@@ -372,7 +415,7 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate,
                 rho_g = _measure_rho_dist(pipe_g, key, delta, ids_g, pre_state)
         elif cfg.backend in ("gspmd", "shard_map"):
             dec, cstate, nbytes_g, intra_g, delta = _group_dist(
-                pipe_g, key, xs_chunks, ids_g, side, cstate, cfg
+                pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate, cfg
             )
             bytes_sent += nbytes_g
             intra_pod += intra_g
@@ -452,6 +495,85 @@ def _decode_stale(pipe, buf: _StaleBuffer, admit: np.ndarray, cohort,
     return mean
 
 
+def _hier_round(pipe, rkey, xs_chunks, part, cohort, hier, cfg, cstate, side,
+                mem_snapshot, stale_buf, n_chunks):
+    """One hierarchical round (docs/DESIGN.md §11.2): per OWNED pod, a
+    pod-local fresh sub-decode against that pod's own ``ServerState``
+    (followed by that pod's stale sub-decode in async mode), then the
+    cross-pod record exchange and the deterministic ascending-pod combine.
+
+    Every process runs this with the same global inputs (task vectors,
+    participation, stale buffer are deterministic replicas) but decodes only
+    its owned pods; after ``exchange`` all processes hold identical records
+    and reduce them identically — there is no root process.
+
+    Returns (mean_chunks, nbytes, intra_pod, dcn_info, rho_round, cstate,
+    n_stale).
+    """
+    from ..runtime import comms as comms_lib
+    from ..runtime import hierarchy as hier_lib
+
+    plan = hier.plan
+    admit = np.asarray([], dtype=part.survivors.dtype)
+    if cfg.async_rounds and stale_buf is not None and cfg.staleness >= 1:
+        admit = np.setdiff1d(stale_buf.ids, part.survivors)
+
+    owned = {}
+    for p in hier.owned_pods:
+        part_p = Participation(sampled=plan.restrict(part.sampled, p),
+                               survivors=plan.restrict(part.survivors, p))
+        rec = {"n": part_p.n_survivors, "mean": None, "bytes": 0, "intra": 0,
+               "rho": None, "n_admit": 0, "stale_mean": None}
+        if part_p.n_survivors:
+            with obs.span("fl", f"pod{p}", track=f"pod{p}", pod=p,
+                          survivors=part_p.n_survivors):
+                dec, nb, intra, rho_p, cstate = _decode_round(
+                    pipe, rkey, xs_chunks, part_p, cohort,
+                    hier.pod_states[p], cfg, cstate, side, mem_snapshot,
+                )
+            obs.count("runtime", "pod.decodes", pod=p)
+            rec.update(mean=np.asarray(dec), bytes=int(nb), intra=int(intra),
+                       rho=rho_p)
+        admit_p = plan.restrict(admit, p)
+        if len(admit_p):
+            stale_p = _decode_stale(pipe, stale_buf, admit_p, cohort,
+                                    hier.pod_states[p])
+            rec.update(n_admit=int(len(admit_p)),
+                       stale_mean=np.asarray(stale_p))
+        owned[p] = rec
+
+    records = hier.exchange.exchange(owned)
+    # remote pods' wire bytes must still land on this process's trace so the
+    # byte-equality gate (trace sum == History ledger) holds per process
+    owned_set = set(hier.owned_pods)
+    remote_bytes = sum(r["bytes"] for q, r in records.items()
+                       if q not in owned_set)
+    obs.marker("fl", "client_encode", track="client_encode",
+               bytes=int(remote_bytes), remote=True, hierarchy="hier")
+
+    mean_np, _, _ = hier_lib.combine_records(records)
+    mean_chunks = jnp.asarray(mean_np)
+    nbytes = sum(r["bytes"] for r in records.values())
+    intra = sum(r["intra"] for r in records.values())
+    rho_round = hier_lib.combine_rho(records)
+
+    stale_np, n_stale, _ = hier_lib.combine_records(
+        records, key="stale_mean", count_key="n_admit"
+    )
+    stale_pods = sum(1 for q, r in records.items()
+                     if q != 0 and r["n_admit"] > 0)
+    dcn_info = comms_lib.cross_pod_traffic(
+        pipe, cohort, part.survivors, plan, n_chunks,
+        stale_pods=stale_pods, hierarchy="hier",
+    )
+    if n_stale:
+        mean_chunks = server_lib.admit_stale(
+            mean_chunks, part.n_survivors, jnp.asarray(stale_np), n_stale,
+            cfg.stale_weight,
+        )
+    return mean_chunks, nbytes, intra, dcn_info, rho_round, cstate, n_stale
+
+
 def _advance_straggler_state(pipe, key, xs_chunks, stragglers, cohort, cstate):
     """Async mode: stragglers DID encode this round (late), so their
     client-held temporal memories advance exactly as a survivor's would —
@@ -500,6 +622,19 @@ def _validate_cfg(pipe, cfg):
         collectives.check_shardable(pipe)
         if cfg.n_owners < 0:
             raise ValueError(f"n_owners must be >= 0, got {cfg.n_owners}")
+    if cfg.hierarchy not in ("flat", "hier"):
+        raise ValueError(f"hierarchy must be 'flat' or 'hier', got "
+                         f"{cfg.hierarchy!r}")
+    if cfg.hierarchy == "hier":
+        if cfg.pods < 1:
+            raise ValueError(f"pods must be >= 1, got {cfg.pods}")
+        if cfg.backend != "local":
+            raise ValueError(
+                "hierarchy='hier' requires backend='local': each pod's "
+                "sub-decode drives the pipeline directly (the dist backends "
+                "model ONE pod's mesh; cross-pod transport is "
+                "runtime.comms)"
+            )
 
 
 def run_rounds(task: Task, spec, cohort: Cohort | None = None,
@@ -523,12 +658,6 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
     cohort = cohort or Cohort(n_clients=task.n_clients)
     if cohort.n_clients != task.n_clients:
         raise ValueError("cohort and task disagree on n_clients")
-    if pipe.has_client_temporal and cfg.backend != "local":
-        raise ValueError(
-            "per-client temporal memories (codec.Temporal(per_client=True)) "
-            "require backend='local': the driver mirrors each client's "
-            "ClientState row"
-        )
     _validate_cfg(pipe, cfg)
 
     key = jax.random.key(cfg.seed)
@@ -538,6 +667,17 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
     n_chunks = chunking.num_chunks(task.dim, pipe.d_block)
     cstate = cohort.init_state(pipe, n_chunks)
     stale_buf: _StaleBuffer | None = None
+
+    hier = None
+    if cfg.hierarchy == "hier":
+        # lazy import: runtime.hierarchy imports fl.server, so the module
+        # edge must point runtime -> fl at import time, fl -> runtime only
+        # at call time
+        from ..runtime import hierarchy as hier_lib
+
+        hier = hier_lib.HierarchicalAggregator(
+            hier_lib.PodPlan(cohort.n_clients, cfg.pods), ctx=cfg.runtime
+        )
 
     for t in range(cfg.n_rounds):
         tr = obs.current_tracer()
@@ -551,36 +691,52 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
         xs_chunks = jax.vmap(lambda v: chunking.chunk(v, pipe.d_block))(vecs)
         side, mem_snapshot = _side_and_memory(pipe, cfg, state_srv, cstate)
 
-        mean_chunks, nbytes, intra_pod, rho_round, cstate = _decode_round(
-            pipe, rkey, xs_chunks, part, cohort, state_srv, cfg, cstate,
-            side, mem_snapshot,
-        )
-        # intra-pod traffic is a modelled server-side quantity, deliberately
-        # keyed ``bytes_intra_pod`` so it never enters the wire-ledger sum
+        if hier is not None:
+            (mean_chunks, nbytes, intra_pod, dcn_info, rho_round, cstate,
+             n_stale) = _hier_round(
+                pipe, rkey, xs_chunks, part, cohort, hier, cfg, cstate,
+                side, mem_snapshot, stale_buf, n_chunks,
+            )
+            dcn = dcn_info["dcn_bytes"]
+        else:
+            mean_chunks, nbytes, intra_pod, rho_round, cstate = _decode_round(
+                pipe, rkey, xs_chunks, part, cohort, state_srv, cfg, cstate,
+                side, mem_snapshot,
+            )
+            dcn = 0
+        # intra-pod and DCN traffic are modelled tier quantities, deliberately
+        # keyed ``bytes_intra_pod`` / ``bytes_dcn`` so they never enter the
+        # wire-ledger sum
         obs.marker("fl", "payload_route", track="payload_route",
-                   bytes_intra_pod=intra_pod, backend=cfg.backend)
+                   bytes_intra_pod=intra_pod, bytes_dcn=dcn,
+                   backend=cfg.backend)
 
         # ---- staleness-1 admission: last round's late payloads land now.
         # EVERY arrival is ledgered (it crossed the wire), but a client that
         # ALSO reported fresh this round supersedes its own stale payload —
         # the fresh one carries strictly newer information, so only the
-        # non-superseded set enters the decode.
+        # non-superseded set enters the decode. (Hierarchical rounds already
+        # decoded and combined the admitted groups per pod inside
+        # ``_hier_round``; only the arrival ledger lands here.)
         with obs.span("fl", "stale_admission", track="stale_admission") as ssp:
-            n_stale, stale_nbytes = 0, 0
+            stale_nbytes = 0
+            if hier is None:
+                n_stale = 0
             if cfg.async_rounds and stale_buf is not None and cfg.staleness >= 1:
                 stale_nbytes = _stale_arrival_bytes(pipe, stale_buf, cohort,
                                                     n_chunks)
                 nbytes += stale_nbytes
-                admit = np.setdiff1d(stale_buf.ids, part.survivors)
-                if len(admit):
-                    stale_mean = _decode_stale(
-                        pipe, stale_buf, admit, cohort, state_srv
-                    )
-                    n_stale = len(admit)
-                    mean_chunks = server_lib.admit_stale(
-                        mean_chunks, part.n_survivors, stale_mean, n_stale,
-                        cfg.stale_weight,
-                    )
+                if hier is None:
+                    admit = np.setdiff1d(stale_buf.ids, part.survivors)
+                    if len(admit):
+                        stale_mean = _decode_stale(
+                            pipe, stale_buf, admit, cohort, state_srv
+                        )
+                        n_stale = len(admit)
+                        mean_chunks = server_lib.admit_stale(
+                            mean_chunks, part.n_survivors, stale_mean,
+                            n_stale, cfg.stale_weight,
+                        )
             ssp["bytes"] = stale_nbytes
             ssp["admitted"] = n_stale
 
@@ -596,8 +752,15 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
                 side=side,
                 mem_rows=None if mem_snapshot is None else mem_snapshot[strag_j],
             )
+            # hierarchical multi-process: a process mirrors only its owned
+            # pods' client rows (non-owned rows are never read here — pod
+            # ownership is static, so their encodes happen elsewhere)
+            strag_adv = part.stragglers
+            if hier is not None:
+                strag_adv = strag_adv[np.isin(strag_adv,
+                                              hier.owned_clients())]
             cstate = _advance_straggler_state(
-                pipe, rkey, xs_chunks, part.stragglers, cohort, cstate
+                pipe, rkey, xs_chunks, strag_adv, cohort, cstate
             )
         else:
             stale_buf = None
@@ -613,6 +776,7 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
         hist.n_stale.append(n_stale)
         hist.stale_bytes.append(int(stale_nbytes))
         hist.intra_pod_bytes.append(int(intra_pod))
+        hist.dcn_bytes.append(int(dcn))
         hist.rho_hat.append(float("nan") if rho_round is None else rho_round)
 
         with obs.span("fl", "temporal_update", track="temporal_update",

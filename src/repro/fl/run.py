@@ -108,6 +108,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--backend", default="local",
                     choices=["local", "gspmd", "shard_map"],
                     help="round execution backend (docs/API.md backend matrix)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help=">= 2 turns on hierarchical aggregation "
+                         "(docs/DESIGN.md §11): pod-local correlation-aware "
+                         "sub-decode, then a cross-pod mean of decoded "
+                         "estimates; 1 is the flat path (bitwise identical)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help=">= 2 forks that many CPU processes via "
+                         "runtime.spawn_local, each decoding its owned pods "
+                         "(or joins an existing runtime when REPRO_PROCESS_ID "
+                         "is set by a cluster launcher)")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="jax.distributed coordinator address for --hosts "
+                         ">= 2 under an external launcher (default: "
+                         "REPRO_COORDINATOR env; spawn_local picks its own)")
     ap.add_argument("--rho", type=float, default=0.9, help="dme/drift correlation")
     ap.add_argument("--scheme", default="iid", choices=["iid", "band", "dirichlet"],
                     help="non-IID data partition for the §5 tasks")
@@ -126,7 +140,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--metrics-json", dest="metrics_json", default=None,
                     metavar="PATH",
                     help="write the metrics-registry snapshot + per-round "
-                         "History records as JSON (schema_version 1)")
+                         "History records as JSON, one entry per compared "
+                         "run (schema_version 2)")
     ap.add_argument("--profile-dir", dest="profile_dir", default=None,
                     metavar="DIR",
                     help="wrap the run in a jax.profiler trace (device-level "
@@ -155,7 +170,7 @@ def make_task(args):
     return get_task(args.task, **kw)
 
 
-def run_one(task, args, name, est_kw):
+def run_one(task, args, name, est_kw, ctx=None):
     d_block = args.d_block or min(1024, max(64, 1 << (task.dim - 1).bit_length()))
     k = args.k or max(1, d_block // 10)
     if getattr(args, "no_fused_kernels", False) and name == "rand_proj_spatial":
@@ -184,6 +199,9 @@ def run_one(task, args, name, est_kw):
         overlap=getattr(args, "overlap", False),
         ownership=getattr(args, "ownership", False),
         n_owners=getattr(args, "owners", 0),
+        hierarchy="hier" if getattr(args, "pods", 1) > 1 else "flat",
+        pods=getattr(args, "pods", 1),
+        runtime=ctx,
     )
     state, hist = rounds_lib.run_rounds(task, spec, cohort, cfg)
     return spec, state, hist
@@ -223,21 +241,39 @@ def _nan_to_none(obj):
 def _run_meta(args, runs) -> dict:
     """Run metadata + ledger totals shared by the trace file and the metrics
     export — what tools/trace_report.py validates the trace events against.
-    ``runs``: [(estimator label, History), ...] (several under --compare)."""
+    ``runs``: [(estimator label, History, metrics snapshot | None), ...]
+    (several under --compare)."""
     import jax
 
     return {
         "task": args.task,
-        "estimators": [label for label, _ in runs],
+        "estimators": [label for label, _, _ in runs],
         "backend": args.backend,
+        "pods": getattr(args, "pods", 1),
+        "hosts": getattr(args, "hosts", 1),
         "seed": args.seed,
-        "n_rounds": sum(len(h.mse) for _, h in runs),
-        "ledger_total_bytes": sum(h.total_bytes for _, h in runs),
-        "ledger_stale_bytes": sum(h.total_stale_bytes for _, h in runs),
-        "ledger_intra_pod_bytes": sum(h.total_intra_pod_bytes for _, h in runs),
+        "n_rounds": sum(len(h.mse) for _, h, _ in runs),
+        "ledger_total_bytes": sum(h.total_bytes for _, h, _ in runs),
+        "ledger_stale_bytes": sum(h.total_stale_bytes for _, h, _ in runs),
+        "ledger_intra_pod_bytes": sum(h.total_intra_pod_bytes
+                                      for _, h, _ in runs),
+        "ledger_dcn_bytes": sum(h.total_dcn_bytes for _, h, _ in runs),
         "jax_version": jax.__version__,
         "jax_backend": jax.default_backend(),
     }
+
+
+def _capture_metrics(args):
+    """Per-run metrics snapshot for ``--metrics-json``: read the registry,
+    then RESET it so the next compared run starts from zero — each run's
+    export is its own counters, not a cumulative last-writer-wins blob.
+    (Tracer events are untouched: the registry and the timeline are separate
+    stores, and the trace metadata ledger sums all runs by design.)"""
+    if not args.metrics_json:
+        return None
+    snap = obs.snapshot()
+    obs.reset()
+    return snap
 
 
 def _write_obs_outputs(args, tracer, runs) -> None:
@@ -252,18 +288,53 @@ def _write_obs_outputs(args, tracer, runs) -> None:
         print(f"trace: {args.trace}  (open at https://ui.perfetto.dev)")
     if args.metrics_json:
         out = {
-            "schema_version": 1,
+            "schema_version": 2,
             "run": meta,
-            "metrics": obs.snapshot(),
-            "rounds": {label: h.round_records() for label, h in runs},
+            # one entry per compared run, each with ITS OWN metrics snapshot
+            # and round records (schema v1 kept one cumulative snapshot and a
+            # label-keyed dict that collided on repeated labels)
+            "runs": [
+                {"estimator": label, "metrics": snap or {},
+                 "rounds": h.round_records()}
+                for label, h, snap in runs
+            ],
         }
         with open(args.metrics_json, "w") as f:
             json.dump(_nan_to_none(out), f, indent=1)
         print(f"metrics: {args.metrics_json}")
 
 
+def _cli_worker(ctx, argv):
+    """Spawned-process body of ``--hosts N``: re-enters main() with the env
+    naming this process, so the child takes the join-existing-runtime path.
+    Module-level because spawn children unpickle workers by qualified name.
+    """
+    return main(argv)
+
+
 def main(argv=None) -> int:
+    import os
+    import sys
+
     args = build_parser().parse_args(argv)
+
+    from ..runtime import launch as launch_lib
+
+    if args.hosts > 1 and os.environ.get(launch_lib.ENV_PROCESS_ID) is None:
+        # no launcher placed us: fork the processes ourselves (CI / laptop)
+        from ..runtime import spawn_local
+
+        child_argv = list(argv if argv is not None else sys.argv[1:])
+        codes = spawn_local(_cli_worker, args.hosts, args=(child_argv,))
+        return max(codes)
+
+    ctx = None
+    if args.hosts > 1 or os.environ.get(launch_lib.ENV_NUM_PROCESSES, "1") != "1":
+        ctx = launch_lib.initialize(
+            launch_lib.Topology.from_env(coordinator=args.coordinator)
+        )
+    primary = ctx is None or ctx.process_id == 0
+
     task = make_task(args)
 
     tracer = None
@@ -279,24 +350,33 @@ def main(argv=None) -> int:
             # across estimators and the metadata ledger sums all of them
             results = {}
             for name, kw in COMPARE:
-                spec, _, hist = run_one(task, args, name, kw)
-                runs.append((name, hist))
+                spec, _, hist = run_one(task, args, name, kw, ctx=ctx)
+                runs.append((name, hist, _capture_metrics(args)))
+                mean_mse = float(np.nanmean(hist.mse))
+                if primary:
+                    report(task, spec, hist, verbose=False)
                 results[f"{name}({kw.get('transform', '-')})"] = (
-                    report(task, spec, hist, verbose=False), hist.total_bytes
+                    mean_mse, hist.total_bytes
                 )
-            print("\nMSE at equal bytes (same k, same round keys):")
-            for label, (mse, b) in sorted(results.items(),
-                                          key=lambda kv: kv[1][0]):
-                print(f"  {label:28s} mean_mse={mse:.6f}  bytes={b}")
+            if primary:
+                print("\nMSE at equal bytes (same k, same round keys):")
+                for label, (mse, b) in sorted(results.items(),
+                                              key=lambda kv: kv[1][0]):
+                    print(f"  {label:28s} mean_mse={mse:.6f}  bytes={b}")
         else:
             est_kw = {"transform": args.transform}
-            spec, state, hist = run_one(task, args, args.estimator, est_kw)
-            runs.append((args.estimator, hist))
-            report(task, spec, hist, verbose=not args.smoke)
-            if "accuracy" in task.aux:
-                print(f"  final accuracy: {task.aux['accuracy'](state):.4f}")
+            spec, state, hist = run_one(task, args, args.estimator, est_kw,
+                                        ctx=ctx)
+            runs.append((args.estimator, hist, _capture_metrics(args)))
+            if primary:
+                report(task, spec, hist, verbose=not args.smoke)
+                if "accuracy" in task.aux:
+                    print(f"  final accuracy: "
+                          f"{task.aux['accuracy'](state):.4f}")
 
-    _write_obs_outputs(args, tracer, runs)
+    # every process holds the identical History; only one writes artifacts
+    if primary:
+        _write_obs_outputs(args, tracer, runs)
     return 0
 
 

@@ -65,6 +65,12 @@ def main(argv=None):
     ap.add_argument("--dme-ownership", type=int, default=0,
                     help="owner shards for the sharded server decode "
                          "(docs/DESIGN.md §10); 0 = replicated decode")
+    ap.add_argument("--pipeline-stages", type=int, default=0,
+                    help="layer-pipeline the block stack over this many "
+                         "devices (GPipe over a 'pipe' mesh axis); 0 = off")
+    ap.add_argument("--pipeline-microbatches", type=int, default=0,
+                    help="microbatch count for --pipeline-stages "
+                         "(default: the stage count)")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--non-iid", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
@@ -85,10 +91,17 @@ def main(argv=None):
         dme = codec.build(args.estimator, k=args.k, d_block=args.d_block,
                           transform=args.transform, ef=args.ef)
 
+    pipe_mesh = None
+    if args.pipeline_stages:
+        pipe_mesh = jax.make_mesh((args.pipeline_stages,), ("pipe",))
+
     def make_step(n_clients):
         spec = dme
         step = make_train_step(cfg, optimizer, dme_spec=spec if n_clients else None,
-                               dme_ownership=args.dme_ownership)
+                               dme_ownership=args.dme_ownership,
+                               mesh=pipe_mesh,
+                               pipeline_stages=args.pipeline_stages,
+                               pipeline_microbatches=args.pipeline_microbatches)
         return jax.jit(step, donate_argnums=(0, 1))
 
     def make_data(n_clients):

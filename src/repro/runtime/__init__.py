@@ -1,0 +1,31 @@
+"""repro.runtime — the multi-host hierarchical aggregation runtime.
+
+Takes the reproduction beyond one process (docs/DESIGN.md §11): ``launch``
+bootstraps ``jax.distributed`` from a process-topology descriptor (and
+``spawn_local`` forks CPU processes so CI exercises the whole runtime
+without TPUs); ``hierarchy`` assigns clients to pods and runs the two-level
+decode — pod-local correlation-aware sub-decode, then a cross-pod mean of
+d-sized decoded estimates; ``comms`` moves the per-pod records between
+processes and models the two-tier (intra-pod ICI / cross-pod DCN) byte
+ledger; ``workers`` holds the picklable entry points subprocess tests and
+benchmarks spawn.
+
+Drive it through ``fl.run_rounds`` with
+``RoundConfig(hierarchy="hier", pods=P, runtime=ctx)`` or from the CLI via
+``python -m repro.fl.run --hosts 2 --pods 2``.
+"""
+from .comms import CrossPodExchange, cross_pod_traffic, psum_scatter_mean  # noqa: F401
+from .hierarchy import (  # noqa: F401
+    HierarchicalAggregator,
+    PodPlan,
+    combine_records,
+    combine_rho,
+)
+from .launch import (  # noqa: F401
+    RuntimeContext,
+    Topology,
+    free_port,
+    initialize,
+    shutdown,
+    spawn_local,
+)

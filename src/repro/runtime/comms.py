@@ -1,0 +1,126 @@
+"""Cross-pod communication: the exact record exchange and the two-tier
+byte model (docs/DESIGN.md §11.3).
+
+Two tiers of traffic exist once aggregation goes hierarchical:
+
+- **intra-pod (ICI)** — payload routing inside one pod's server decode.
+  Already modelled by ``dist.collectives.intra_pod_traffic`` and ledgered in
+  ``History.intra_pod_bytes``; pods reuse it unchanged (each pod's decode is
+  a smaller instance of the same problem).
+- **cross-pod (DCN)** — what crosses pod boundaries. Flat aggregation ships
+  every non-root survivor's PAYLOAD to the root (n·k-ish bytes); the
+  hierarchical route ships each contributing pod's d-sized DECODED estimate
+  up and the combined mean back down (d-ish bytes) — the accuracy-vs-
+  communication trade of Konečný & Richtárik, which wins exactly in the
+  n·k > d regime the paper's estimators target. ``cross_pod_traffic``
+  models both routes; ``History.dcn_bytes`` ledgers the route taken.
+
+``CrossPodExchange`` is the transport that actually moves the per-pod
+records between processes: the ``jax.distributed`` coordinator KV store
+(bit-exact byte round-trip; XLA cross-process collectives don't exist on
+the CPU backend). On-device meshes combine decoded tiles with
+``dist.collectives.psum_scatter_mean`` instead (re-exported here) — same
+math, DCN traffic (P-1)/P of the naive all-reduce.
+
+Trace contract: DCN bytes annotate spans under the key ``bytes_dcn`` (like
+``bytes_intra_pod``), never ``bytes`` — the Perfetto gate
+(tools/trace_report.py) sums ``bytes`` exactly against the wire ledger and
+modelled tiers must not enter that sum.
+"""
+from __future__ import annotations
+
+import pickle
+
+import numpy as np
+
+from ..dist.collectives import psum_scatter_mean  # noqa: F401  (re-export)
+from .launch import RuntimeContext
+
+__all__ = ["CrossPodExchange", "cross_pod_traffic", "psum_scatter_mean"]
+
+
+class CrossPodExchange:
+    """All-to-all of per-pod round records across runtime processes.
+
+    Each process publishes ONE pickled blob per round — ``{pod: record}``
+    for every pod it owns (possibly empty, so remote gets never hang) — then
+    blocking-gets every other process's blob. Records are plain dicts of
+    numpy arrays + scalars; numpy round-trips pickle bit-exactly, which is
+    what the 2-process == 1-process bitwise-parity contract rides on.
+
+    Single-process contexts (or ``ctx=None``) short-circuit: the owned
+    records ARE the global records. A monotone per-instance sequence number
+    keys each round's blobs and barriers so rounds can never alias; the
+    publisher deletes its blob after the exit barrier.
+    """
+
+    def __init__(self, ctx: RuntimeContext | None = None):
+        self.ctx = ctx
+        self._seq = 0
+
+    def exchange(self, owned: dict) -> dict:
+        """``owned``: {pod_id: record} for this process's pods. Returns the
+        union over all processes, exactly once per call site per round."""
+        ctx = self.ctx
+        if ctx is None or not ctx.is_distributed:
+            return dict(owned)
+        seq = self._seq
+        self._seq += 1
+        key = f"repro/xpod/{seq}/{ctx.process_id}"
+        ctx.put_bytes(key, pickle.dumps(owned, protocol=pickle.HIGHEST_PROTOCOL))
+        ctx.barrier(f"repro/xpod-ready/{seq}")
+        records = dict(owned)
+        for p in range(ctx.n_processes):
+            if p != ctx.process_id:
+                records.update(pickle.loads(
+                    ctx.get_bytes(f"repro/xpod/{seq}/{p}")))
+        ctx.barrier(f"repro/xpod-done/{seq}")
+        ctx.delete(key)
+        return records
+
+
+def cross_pod_traffic(pipe, cohort, survivors, plan, n_chunks: int, *,
+                      stale_pods: int = 0, hierarchy: str = "hier") -> dict:
+    """Modelled cross-pod (DCN-tier) bytes of one round's aggregation.
+
+    - ``dcn_bytes_flat``: flat aggregation to a root server placed in pod 0
+      — every survivor OUTSIDE pod 0 ships its full payload across the pod
+      boundary, per budget group:
+      ``sum_g n_nonroot_g * payload_nbytes_g(n_chunks)``.
+    - ``dcn_bytes_hier``: the hierarchical route — each contributing
+      non-root pod ships ONE d-sized decoded estimate up (float32), pods
+      that additionally admitted a stale group ship that stale mean too
+      (``stale_pods`` of them), and the combined mean broadcasts back down
+      to the other P-1 pods:
+      ``(n_contributing_nonroot + stale_pods + n_pods - 1) * C * d_block * 4``.
+    - ``dcn_bytes``: the route actually taken — hier at ``n_pods >= 2``,
+      else 0 (one pod / flat: nothing crosses a pod boundary; the root IS
+      the server). This is the ``History.dcn_bytes`` column.
+
+    The hier route wins exactly when payload bytes exceed estimate bytes —
+    the n·k > d regime (asserted in tests/test_runtime.py and reported by
+    benchmarks/bench_multihost.py).
+    """
+    pods = np.asarray([plan.pod_of(int(i)) for i in np.asarray(survivors)],
+                      dtype=np.int64)
+    est_nbytes = n_chunks * pipe.d_block * 4
+
+    flat = 0
+    for k_g, ids_g in cohort.budget_groups(survivors, pipe.k):
+        if len(ids_g) == 0:
+            continue
+        n_nonroot = int(np.sum(
+            np.asarray([plan.pod_of(int(i)) for i in ids_g]) != 0))
+        flat += n_nonroot * pipe.with_budget(k_g).payload_nbytes(n_chunks)
+
+    contributing_nonroot = int(len({int(p) for p in pods} - {0}))
+    up = (contributing_nonroot + int(stale_pods)) * est_nbytes
+    down = (plan.n_pods - 1) * est_nbytes
+    hier = up + down if plan.n_pods > 1 else 0
+    taken = hier if (hierarchy == "hier" and plan.n_pods > 1) else 0
+    return {
+        "n_pods": plan.n_pods,
+        "dcn_bytes_flat": int(flat),
+        "dcn_bytes_hier": int(hier),
+        "dcn_bytes": int(taken),
+    }

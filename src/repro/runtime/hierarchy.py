@@ -1,0 +1,172 @@
+"""Hierarchical (per-pod) aggregation: clients -> pods -> one global mean.
+
+The tree shape millions of clients require (docs/DESIGN.md §11.2): a
+``PodPlan`` assigns clients to pods; each pod's server runs the SAME
+correlation-aware sub-decode the flat path runs (``fl.server`` pipeline
+resolution + online rho tracking, ``fl.rounds._decode_round``) — but sees
+only its cohort's payloads and carries its OWN online R estimate, the
+per-pod correlation bookkeeping Rand-k-Spatial's analysis calls for. The
+cross-pod combine is then a d-sized weighted mean of decoded estimates
+(``combine_records``), with cross-pod traffic modelled and ledgered by
+``runtime.comms``.
+
+Exactness contract: at one pod — or with ``RoundConfig(hierarchy="flat")``
+— the hierarchical driver is BITWISE identical to the single-process flat
+path. Mechanically: a 1-pod plan restricts nothing (``restrict`` preserves
+the survivors array exactly), the single pod's ``ServerState`` receives the
+same ``ema_update`` sequence the flat global state would, and
+``combine_records`` short-circuits a sole contributing pod (returns its
+decode unscaled, no combine arithmetic to reassociate floats through).
+Pod ownership composes with PR 5 ``ChunkOwnership`` INSIDE each pod: the
+pod's sub-decode forwards ``RoundConfig.ownership`` unchanged, so chunk
+shards route intra-pod (ICI tier) while pods exchange estimates (DCN tier).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..fl import server as server_lib
+from .comms import CrossPodExchange
+from .launch import RuntimeContext
+
+
+@dataclasses.dataclass(frozen=True)
+class PodPlan:
+    """Clients -> pods, contiguous ceil blocks (the ``ChunkOwnership``
+    idiom): pod p owns clients [p*cpp, min((p+1)*cpp, n_clients))."""
+
+    n_clients: int
+    n_pods: int
+
+    def __post_init__(self):
+        if self.n_pods < 1:
+            raise ValueError(f"n_pods must be >= 1, got {self.n_pods}")
+        if self.n_clients < self.n_pods:
+            raise ValueError(
+                f"need at least one client per pod: {self.n_clients} clients "
+                f"< {self.n_pods} pods"
+            )
+
+    @property
+    def clients_per_pod(self) -> int:
+        return -(-self.n_clients // self.n_pods)  # ceil
+
+    def slice_for(self, pod: int) -> tuple[int, int]:
+        if not 0 <= pod < self.n_pods:
+            raise ValueError(f"pod {pod} out of range [0, {self.n_pods})")
+        lo = pod * self.clients_per_pod
+        return lo, min(lo + self.clients_per_pod, self.n_clients)
+
+    def pod_of(self, client: int) -> int:
+        if not 0 <= client < self.n_clients:
+            raise ValueError(
+                f"client {client} out of range [0, {self.n_clients})"
+            )
+        return client // self.clients_per_pod
+
+    def clients_of(self, pod: int) -> np.ndarray:
+        lo, hi = self.slice_for(pod)
+        return np.arange(lo, hi)
+
+    def restrict(self, ids: np.ndarray, pod: int) -> np.ndarray:
+        """``ids`` filtered to pod ``pod``, ORDER PRESERVED — the bitwise
+        exactness contract rides on this: a 1-pod restrict must return the
+        survivors array exactly as the flat path would see it."""
+        ids = np.asarray(ids)
+        lo, hi = self.slice_for(pod)
+        return ids[(ids >= lo) & (ids < hi)]
+
+
+class HierarchicalAggregator:
+    """Per-pod server states + the cross-pod exchange for one run.
+
+    One instance per ``run_rounds`` call (mirrors the flat path's single
+    ``ServerState``). ``pod_states[p]`` is pod p's server: its online rho
+    EMA advances only on rounds where pod p's cohort contributed, exactly
+    as a real pod-local server's would. The GLOBAL ``ServerState`` (owned
+    by the round driver) keeps only ``prev_mean`` — the broadcast temporal
+    side information is the COMBINED estimate every client receives, so it
+    lives above the pods.
+
+    Multi-process: ``ctx`` names this process; it decodes only
+    ``owned_pods`` and learns the other pods' records via ``exchange``.
+    Every process therefore holds identical combined results each round —
+    there is no root, which is what makes the 2-process and 1-process runs
+    bitwise comparable.
+    """
+
+    def __init__(self, plan: PodPlan, ctx: RuntimeContext | None = None):
+        self.plan = plan
+        self.ctx = ctx
+        self.pod_states = [server_lib.ServerState()
+                           for _ in range(plan.n_pods)]
+        self.exchange = CrossPodExchange(ctx)
+
+    @property
+    def owned_pods(self) -> range:
+        if self.ctx is None:
+            return range(self.plan.n_pods)
+        return self.ctx.pods_owned(self.plan.n_pods)
+
+    def owns_client(self, client: int) -> bool:
+        return self.plan.pod_of(client) in self.owned_pods
+
+    def owned_clients(self) -> np.ndarray:
+        """All client ids of this process's pods, ascending (owned pods are
+        a contiguous range of contiguous blocks)."""
+        pods = self.owned_pods
+        if len(pods) == 0:
+            return np.arange(0)
+        lo, _ = self.plan.slice_for(pods[0])
+        _, hi = self.plan.slice_for(pods[-1])
+        return np.arange(lo, hi)
+
+
+def combine_records(records: dict, key: str = "mean", count_key: str = "n"):
+    """Cross-pod combine: client-count-weighted mean of per-pod decodes.
+
+    ``records``: {pod: {key: (C, d_block) ndarray | None, count_key: int}}.
+    Pods with count 0 (or a None estimate) contribute nothing. Returns
+    (combined (C, d_block) | None, n_total, rounded per-pod weights dict).
+
+    Determinism contract: summation runs in ASCENDING pod order on float32
+    numpy, so every process — whatever subset of pods it decoded locally —
+    reduces the exchanged records identically, bit for bit. A sole
+    contributing pod short-circuits: its decode is returned UNSCALED (no
+    ``*(n/n)`` round-trip), which is what makes the 1-pod hierarchy
+    bitwise identical to the flat path.
+    """
+    live = [(p, r) for p, r in sorted(records.items())
+            if r.get(count_key, 0) > 0 and r.get(key) is not None]
+    n_total = int(sum(r[count_key] for _, r in live))
+    if not live:
+        return None, 0, {}
+    if len(live) == 1:
+        p, r = live[0]
+        return np.asarray(r[key]), n_total, {p: 1.0}
+    combined = None
+    weights = {}
+    for p, r in live:
+        w = r[count_key] / n_total
+        weights[p] = w
+        term = np.asarray(r[key]) * np.float32(w)
+        combined = term if combined is None else combined + term
+    return combined, n_total, weights
+
+
+def combine_rho(records: dict) -> float | None:
+    """Client-count-weighted mean of the pods' per-round rho measurements
+    (the cross-pod view of ``fl.rounds``'s per-group combine). None when no
+    pod measured."""
+    parts = [(r["rho"], r["n"]) for r in records.values()
+             if r.get("rho") is not None and r.get("n", 0) > 0]
+    if not parts:
+        return None
+    if len(parts) == 1:
+        # no ``*n/n`` float round-trip: the sole pod's measurement must hit
+        # the History bitwise identically to the flat path's
+        return float(parts[0][0])
+    wsum = sum(n for _, n in parts)
+    return float(sum(rho * n for rho, n in parts) / wsum)

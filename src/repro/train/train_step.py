@@ -33,6 +33,73 @@ def _loss(params, cfg, batch):
     return transformer.loss_fn(params, cfg, batch)
 
 
+def _pipelined_loss(params, cfg, batch, *, mesh, axis, n_stages, n_micro):
+    """``transformer.loss_fn`` with the scanned block stack run through
+    ``dist.pipeline.pipeline_apply`` (GPipe over the ``axis`` mesh axis).
+
+    Embed / prologue / epilogue / logits / CE are the exact expressions from
+    ``loss_fn``; only the repeated block stack is staged. The batch is split
+    into ``n_micro`` microbatches along the leading batch dim, so batch must
+    divide evenly. MoE block patterns are rejected up front: the pipeline
+    stage carries activations only, so the router aux loss from scanned
+    blocks would be silently dropped (prologue/epilogue MoE is fine — those
+    run unrolled outside the pipeline).
+    """
+    from ..dist import pipeline as pipe_lib
+    from ..models import act_sharding
+
+    inputs, labels = batch["inputs"], batch["labels"]
+    b, s = inputs.shape[0], inputs.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = transformer.embed_inputs(params, cfg, inputs)
+    aux = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(cfg.prologue):
+        x, aux, _ = transformer._run_layer(
+            cfg, spec, params["prologue"][i], x, aux, positions, None
+        )
+
+    if cfg.n_blocks > 0:
+
+        def stage_fn(stage_params, h):
+            pos = jnp.broadcast_to(
+                jnp.arange(h.shape[1], dtype=jnp.int32), h.shape[:2]
+            )
+
+            def body(carry, p_block):
+                xx, _, _ = transformer._run_block(
+                    cfg, p_block, carry, jnp.zeros((), jnp.float32), pos, None
+                )
+                return xx, None
+
+            if cfg.remat == "block":
+                body = jax.checkpoint(body)
+            h, _ = jax.lax.scan(body, h, stage_params)
+            return h
+
+        staged = pipe_lib.partition_blocks(params["blocks"], n_stages)
+        mb = b // n_micro
+        # activation-sharding constraints don't compose with shard_map's
+        # per-shard view; the pipeline manages placement itself
+        with act_sharding.constraint(None):
+            xm = x.reshape((n_micro, mb) + x.shape[1:])
+            xm = pipe_lib.pipeline_apply(stage_fn, staged, xm, mesh, axis)
+        x = xm.reshape((b,) + x.shape[1:])
+
+    for i, spec in enumerate(cfg.epilogue):
+        x, aux, _ = transformer._run_layer(
+            cfg, spec, params["epilogue"][i], x, aux, positions, None
+        )
+    logits = transformer.logits_fn(params, cfg, x)
+    valid = labels >= 0
+    labels_safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = jnp.where(valid, nll, 0.0).sum() / denom
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
 def init_train_state(cfg, optimizer, params, dme_spec=None, n_clients: int = 0):
     state = {"opt": optimizer.init(params)}
     if dme_spec is not None:
@@ -51,7 +118,9 @@ def init_train_state(cfg, optimizer, params, dme_spec=None, n_clients: int = 0):
 def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
                     client_axes=("pod",), seed: int = 0, dme_impl: str = "auto",
                     dme_overlap: bool = False, dme_overlap_tile: int = 1,
-                    dme_ownership=False):
+                    dme_ownership=False, pipeline_stages: int = 0,
+                    pipeline_axis: str = "pipe",
+                    pipeline_microbatches: int = 0):
     """``dme_overlap=True`` streams the gradient's chunk axis through the
     collectives' double buffer (encode chunk c+1 while chunk c's payload is
     in flight) — bit-identical to the synchronous exchange, so it composes
@@ -62,8 +131,37 @@ def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
     shard_map impl each mesh shard receives and decodes only the gradient
     chunks it owns (all_to_all payload routing + one all_gather of decoded
     means) instead of materialising every client's payload; bit-identical to
-    the replicated decode, composes with EF and ``dme_overlap``."""
+    the replicated decode, composes with EF and ``dme_overlap``.
+
+    ``pipeline_stages >= 1`` runs the scanned block stack layer-pipelined
+    over the ``pipeline_axis`` mesh axis (GPipe, ``dist.pipeline``) inside
+    the loss; microbatch count defaults to the stage count. Composes with
+    both dme paths (the pipeline shard_map lives inside the per-client
+    vmapped loss)."""
     base_key = jax.random.key(seed)
+    loss_fn = _loss
+    if pipeline_stages:
+        if mesh is None or pipeline_axis not in mesh.shape:
+            raise ValueError(
+                f"pipeline_stages={pipeline_stages} needs a mesh with a "
+                f"'{pipeline_axis}' axis"
+            )
+        if mesh.shape[pipeline_axis] != pipeline_stages:
+            raise ValueError(
+                f"pipeline_stages={pipeline_stages} != mesh axis "
+                f"'{pipeline_axis}' size {mesh.shape[pipeline_axis]}"
+            )
+        for spec in cfg.block_pattern:
+            if spec.ffn == "moe":
+                raise ValueError(
+                    "pipeline_stages does not support MoE block patterns "
+                    "(the stage hop would drop the router aux loss)"
+                )
+        loss_fn = functools.partial(
+            _pipelined_loss, mesh=mesh, axis=pipeline_axis,
+            n_stages=pipeline_stages,
+            n_micro=pipeline_microbatches or pipeline_stages,
+        )
     if dme_spec is not None:
         dme_spec = as_pipeline(dme_spec)
         if dme_overlap:
@@ -74,7 +172,7 @@ def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
     if dme_spec is None:
 
         def plain_step(params, state, batch, step):
-            (loss, metrics), grads = jax.value_and_grad(_loss, has_aux=True)(
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 params, cfg, batch
             )
             params, opt, om = optimizer.update(grads, state["opt"], params)
@@ -85,7 +183,10 @@ def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
     # shard_map path: local chunking, payload-only cross-client traffic
     # (§Perf H-c). gspmd path kept as the measured baseline. EF residuals are
     # supported on both paths (shard_map keeps each row on its client shard).
-    use_shardmap = mesh is not None and dme_impl in ("auto", "shard_map")
+    use_shardmap = (
+        mesh is not None and dme_impl in ("auto", "shard_map")
+        and all(ax in mesh.shape for ax in client_axes)
+    )
     shardings = collectives.dme_shardings(mesh, client_axes)
     param_pspecs = None
     if use_shardmap:
@@ -99,7 +200,7 @@ def make_train_step(cfg, optimizer, *, dme_spec=None, mesh=None,
         key = jax.random.fold_in(base_key, step)
 
         def per_client(b):
-            (l, m), g = jax.value_and_grad(_loss, has_aux=True)(params, cfg, b)
+            (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, cfg, b)
             return l, m, g
 
         losses, metrics, grads = jax.vmap(per_client)(batch)

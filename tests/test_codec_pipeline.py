@@ -226,12 +226,45 @@ def test_client_temporal_memory_tracks_clients():
         assert d_own < d_mean, (i, d_own, d_mean)
 
 
-def test_client_temporal_requires_local_backend():
-    task = get_task("dme", n_clients=4, d=D, rho=0.5)
-    pipe = codec.Pipeline([codec.RandK(k=8, d_block=D), codec.Temporal()])
-    with pytest.raises(ValueError, match="per-client temporal"):
-        run_rounds(task, pipe, Cohort(n_clients=4),
-                   RoundConfig(n_rounds=1, backend="gspmd"))
+def test_client_temporal_on_gspmd_matches_local():
+    """Per-client temporal memories now ride the collectives backends
+    (ROADMAP item): the server mirrors each surviving client's memory update
+    by re-running the deterministic encode, so decode trajectory, byte
+    ledger, AND the final memory state all match the local backend — under
+    partial participation and dropout, where the scatter of partial cohorts
+    back into the full state matters."""
+    n, d = 6, 2 * D
+    task = get_task("drift", n_clients=n, d=d, rho=0.9, omega=0.03,
+                    client_bias=1.0)
+    cohort = Cohort(n_clients=n, participation=0.9, dropout=0.2)
+    pipe = codec.Pipeline([codec.RandK(k=16, d_block=D), codec.Temporal()])
+    _, h_local = run_rounds(task, pipe, cohort, RoundConfig(n_rounds=6))
+    _, h_gspmd = run_rounds(task, pipe, cohort,
+                            RoundConfig(n_rounds=6, backend="gspmd"))
+    assert h_local.bytes == h_gspmd.bytes
+    np.testing.assert_allclose(h_local.mse, h_gspmd.mse, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(h_local.client_state.memory),
+        np.asarray(h_gspmd.client_state.memory), rtol=1e-4, atol=1e-6)
+
+
+def test_client_temporal_on_shard_map_matches_local():
+    """Same mirror on the shard_map backend."""
+    n, d = 6, 2 * D
+    task = get_task("drift", n_clients=n, d=d, rho=0.9, omega=0.03,
+                    client_bias=1.0)
+    cohort = Cohort(n_clients=n, dropout=0.2)
+    pipe = codec.Pipeline([codec.RandK(k=16, d_block=D), codec.Temporal()])
+    mesh = jax.make_mesh((1,), ("pod",))
+    _, h_local = run_rounds(task, pipe, cohort, RoundConfig(n_rounds=5))
+    _, h_sm = run_rounds(task, pipe, cohort,
+                         RoundConfig(n_rounds=5, backend="shard_map",
+                                     mesh=mesh))
+    assert h_local.bytes == h_sm.bytes
+    np.testing.assert_allclose(h_local.mse, h_sm.mse, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(h_local.client_state.memory),
+        np.asarray(h_sm.client_state.memory), rtol=1e-4, atol=1e-6)
 
 
 # --------------------------------- EF x heterogeneous budgets (satellite)

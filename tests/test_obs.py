@@ -250,3 +250,30 @@ def test_cg_iteration_telemetry_outside_jit():
     snap = obs.snapshot()
     assert any(k.startswith("kernels/decode_route") for k in snap["counters"])
     assert "kernels/cg_iters" in snap["histograms"]
+
+
+# ------------------------------------------- --compare metrics export (CLI)
+
+
+def test_compare_metrics_json_is_per_run(tmp_path, capsys):
+    """--compare + --metrics-json emits ONE merged snapshot with an entry
+    per compared run, each holding its OWN counters and round records — the
+    schema-v1 regression was last-writer-wins on a single cumulative blob."""
+    from repro.fl import run as run_cli
+
+    path = tmp_path / "metrics.json"
+    rc = run_cli.main(["--task", "dme", "--compare", "--smoke",
+                       "--metrics-json", str(path)])
+    assert rc in (0, None)
+    data = json.loads(path.read_text())
+    assert data["schema_version"] == 2
+    labels = [r["estimator"] for r in data["runs"]]
+    assert labels == ["rand_k", "rand_k_spatial", "rand_proj_spatial"]
+    assert data["run"]["estimators"] == labels
+    assert data["run"]["n_rounds"] == 9  # 3 smoke rounds x 3 runs
+    for entry in data["runs"]:
+        assert len(entry["rounds"]) == 3
+        encodes = [v for k, v in entry["metrics"]["counters"].items()
+                   if "client_encode" in k]
+        # each run's snapshot counts ITS 3 rounds, not a running total
+        assert encodes and sum(encodes) == 3.0, entry["metrics"]["counters"]
