@@ -28,6 +28,7 @@ ESTIMATORS = [
     ("rand_proj_spatial", dict(transform="avg"), False),
     ("rand_proj_spatial", dict(transform="wavg"), False),
     ("rand_proj_spatial", dict(transform="avg"), True),  # temporal decode
+    ("sparse_proj", dict(transform="avg"), False),       # cheap-encode row
 ]
 
 # (task factory kwargs, d_block, k, rounds, bytes-to-target threshold)

@@ -62,7 +62,8 @@ def fig3_correlation(out, trials=300):
         xs = jnp.asarray(np.eye(d)[assign][:, None, :], jnp.float32)
         r = float(correlation.r_exact(xs))
         rows(out, f"fig3/{label}/n{n}_k{k}/rand_k_theory_eq1", 0, f"{eq1:.4f}")
-        for name, tf in [("rand_k_spatial", "opt"), ("rand_proj_spatial", "opt")]:
+        for name, tf in [("rand_k_spatial", "opt"), ("rand_proj_spatial", "opt"),
+                         ("sparse_proj", "opt")]:
             spec = codec.build(name, k=k, d_block=d, transform=tf, r_value=r)
             mse, sec = mse_over_trials(spec, xs, trials)
             rows(out, f"fig3/{label}/n{n}_k{k}/{name}", sec * 1e6,
@@ -79,6 +80,8 @@ def practical_avg_and_est(out, trials=200):
         ("rand_proj_spatial", dict(transform="avg"), "rand_proj_spatial_avg"),
         ("rand_proj_spatial", dict(transform="opt", r_mode="est"), "rand_proj_spatial_est"),
         ("rand_proj_spatial", dict(transform="opt", r_value=r), "rand_proj_spatial_oracle"),
+        ("sparse_proj", dict(transform="avg"), "sparse_proj_avg"),
+        ("sparse_proj", dict(transform="opt", r_mode="est"), "sparse_proj_est"),
     ]:
         spec = codec.build(name, k=k, d_block=d, **kw)
         mse, sec = mse_over_trials(spec, xs, trials)

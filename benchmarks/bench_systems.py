@@ -175,6 +175,32 @@ def fused_kernels(out, n=8, k=64, d=1024, n_chunks=4):
                  sec * 1e6, f"compile_us={comp * 1e6:.0f}")
 
 
+def sparseproj_encode(out, k=64, d=1024, n_chunks=4, s=32.0):
+    """Cheap-encode frontier (EXPERIMENTS.md): very-sparse projection vs the
+    SRHT per-client encode at EQUAL budget k — wall-clock AND the declared
+    per-chunk encode flops; the rows behind the CI ``SPARSEPROJ_smoke.json``
+    artifact. ``tools/bench_artifacts.py extract sparseproj`` FAILS the
+    bench-smoke job unless the sparse_proj row exists and beats the srht row
+    on BOTH columns (O(k d / s) gather vs O(d log d) FWHT — at these shapes
+    the draw + gather must win outright, not just asymptotically)."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((n_chunks, d)), jnp.float32)
+    key = jax.random.key(11)
+    for label, sp in [
+        ("srht", codec.RandProjSpatial(k=k, d_block=d, transform="avg")),
+        ("sparse_proj", codec.SparseProj(k=k, d_block=d, s=s,
+                                         transform="avg")),
+    ]:
+        pipe = codec.as_pipeline(sp)
+        enc = jax.jit(lambda kk, p=pipe: p.encode_payload(kk, 0, x))
+        comp, sec, _ = timed_with_compile(
+            enc, key, obs_name=f"sparseproj_encode/{label}")
+        rows(out, f"sparseproj/encode/k{k}_d{d}_C{n_chunks}/{label}",
+             sec * 1e6,
+             f"flops_per_chunk={sp.encode_flops_per_chunk()};"
+             f"compile_us={comp * 1e6:.0f}")
+
+
 def run(out):
     walltime(out)
     rank_s(out)
@@ -182,3 +208,4 @@ def run(out):
     chunked_scale(out)
     ownership(out)
     fused_kernels(out)
+    sparseproj_encode(out)

@@ -44,6 +44,7 @@ def smoke(out: list[str]) -> None:
     bench_systems.walltime(out, n=4, k=16, d=256)
     bench_systems.ownership(out, n=8, k=64, d=128, n_chunks=8)
     bench_systems.fused_kernels(out, n=8, k=32, d=512, n_chunks=4)
+    bench_systems.sparseproj_encode(out)  # full-size: the gate needs margin
 
     from . import bench_fl
 

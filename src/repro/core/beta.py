@@ -74,6 +74,18 @@ def _simulate_bank(
                 return kops.srht_rows_matrix(signs, rows, d)
             if projection == "gauss":
                 return jax.random.normal(k1, (k, d)) / jnp.sqrt(d)
+            if projection.startswith("sparse"):
+                # very-sparse maps (SparseProj): nnz signed entries of
+                # magnitude 1/sqrt(nnz) per row, columns WITH replacement
+                # (scatter-ADD merges within-row duplicates) — the same law
+                # as sparse_proj._client_draw, so the bank's eigenvalue
+                # distribution matches the decode's S.
+                nnz = int(projection[len("sparse"):])
+                cols = jax.random.randint(k2, (k, nnz), 0, d)
+                signs = jax.random.rademacher(k1, (k, nnz), jnp.float32)
+                g = jnp.zeros((k, d), jnp.float32)
+                g = g.at[jnp.arange(k)[:, None], cols].add(signs)
+                return g * (1.0 / jnp.sqrt(1.0 * nnz))
             raise ValueError(f"no eig bank for projection {projection!r}")
 
         a = jax.vmap(client)(keys).reshape(n * k, d)
@@ -104,6 +116,17 @@ def srht_eig_bank(
     eigs = _simulate_bank(n, k, d, trials, seed, projection)
     np.savez_compressed(path, eigs=eigs)
     return eigs
+
+
+def sparse_eig_bank(
+    n: int, k: int, d: int, nnz: int, trials: int | None = None, seed: int = 0
+) -> np.ndarray:
+    """Eigenvalue bank for SparseProj's S — same machinery as the SRHT bank,
+    keyed (and disk-cached) by the per-row density ``nnz`` as well, since the
+    spectrum of S depends on how sparse the maps are."""
+    if not 1 <= nnz <= d:
+        raise ValueError(f"nnz must be in [1, d={d}], got {nnz}")
+    return srht_eig_bank(n, k, d, trials, seed, projection=f"sparse{nnz}")
 
 
 def beta_fn_from_bank(bank: np.ndarray, n: int, d: int, eps: float = 0.0):

@@ -20,6 +20,7 @@ memories) lives in an explicit ``ClientState`` pytree. ``build(name,
 **old_kwargs)`` (see compat) keeps the historical flat-keyword construction
 style working; the flat ``EstimatorSpec`` class itself is removed.
 """
+from .budget import BudgetExceedsDimension, jl_min_k, suggest_budget  # noqa: F401
 from .compat import as_pipeline, build  # noqa: F401
 from .payload import (  # noqa: F401
     AUX,
@@ -42,6 +43,7 @@ from .sparsifiers import (  # noqa: F401
     RandKSpatial,
     RandProjSpatial,
     Sparsifier,
+    SparseProj,
     TopK,
     Wangni,
 )

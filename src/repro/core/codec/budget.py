@@ -1,0 +1,68 @@
+"""Budget auto-picker: the Johnson-Lindenstrauss bound as a k-from-(n, eps)
+rule (Konecny & Richtarik's budget-selection problem, sklearn's
+``johnson_lindenstrauss_min_dim`` closed form).
+
+A random projection to k dimensions preserves pairwise distances among n
+points to within a (1 ± eps) factor w.h.p. once
+
+    k >= 4 ln(n) / (eps^2 / 2 - eps^3 / 3)
+
+so for distributed mean estimation over ``n_clients`` vectors, requesting
+distortion ``eps`` pins the per-chunk budget. ``fl.run --budget auto`` wires
+this as the CLI entry point.
+"""
+from __future__ import annotations
+
+import math
+
+
+class BudgetExceedsDimension(ValueError):
+    """The JL bound asks for more coordinates than the chunk has — the
+    requested distortion is unattainable by projecting down; loosen ``eps``,
+    shrink the cohort, or send the chunk uncompressed."""
+
+
+def jl_min_k(n_clients: int, eps: float) -> int:
+    """Closed-form JL lower bound on the projection dimension (no clamping)."""
+    if not 0.0 < eps < 1.0:
+        raise ValueError(f"eps must be in (0, 1), got {eps}")
+    if n_clients < 2:
+        raise ValueError(f"need n_clients >= 2 for a pairwise bound, got {n_clients}")
+    denom = eps**2 / 2.0 - eps**3 / 3.0
+    return int(math.ceil(4.0 * math.log(n_clients) / denom))
+
+
+def suggest_budget(n_clients: int, eps: float, d: int) -> int:
+    """Per-chunk budget k for ``n_clients`` vectors at JL distortion ``eps``.
+
+    Monotone: non-decreasing in ``n_clients``, non-increasing in ``eps``.
+    Raises :class:`BudgetExceedsDimension` when the bound exceeds ``d`` —
+    silently clamping to d would report a distortion guarantee the budget
+    cannot deliver.
+    """
+    if d < 1:
+        raise ValueError(f"d must be >= 1, got {d}")
+    k = jl_min_k(n_clients, eps)
+    if k > d:
+        raise BudgetExceedsDimension(
+            f"JL bound needs k={k} coordinates for n_clients={n_clients} at "
+            f"eps={eps}, but the chunk only has d={d}; loosen eps (>= "
+            f"{_min_feasible_eps(n_clients, d):.3f} suffices) or send "
+            "uncompressed"
+        )
+    return k
+
+
+def _min_feasible_eps(n_clients: int, d: int, tol: float = 1e-3) -> float:
+    """Smallest eps (to ``tol``) whose JL bound fits in d — for the error
+    message's actionable hint; bisection on the monotone bound."""
+    lo, hi = tol, 1.0 - tol
+    if jl_min_k(n_clients, hi) > d:
+        return hi
+    while hi - lo > tol:
+        mid = (lo + hi) / 2.0
+        if jl_min_k(n_clients, mid) > d:
+            lo = mid
+        else:
+            hi = mid
+    return hi

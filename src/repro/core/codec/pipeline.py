@@ -135,12 +135,15 @@ class Pipeline:
         with the partition. It is strictly weaker than ``chunk_streamable``
         — clients always encode their FULL vector, so position-keyed encodes
         (wangni, induced, ``shared_randomness=False``) and full-array
-        rounding noise (``Int8Quant``) are all fine; only
-        ``rand_k_spatial(r_mode='est')`` breaks it (its online R-hat pools
-        the scatter statistics of every chunk into one scalar rho).
+        rounding noise (``Int8Quant``) are all fine; only the decodes whose
+        online R-hat pools the statistics of every chunk into one scalar rho
+        break it: ``rand_k_spatial(r_mode='est')`` and
+        ``sparse_proj(r_mode='est')`` (sparse rows overlap across clients,
+        so there is no exact per-chunk norm identity to shard the R-hat on).
         """
         sp = self.sparsifier
-        if sp.name == "rand_k_spatial" and getattr(sp, "r_mode", "fixed") == "est":
+        if sp.name in ("rand_k_spatial", "sparse_proj") and \
+                getattr(sp, "r_mode", "fixed") == "est":
             return sp, (
                 "pools its online R-hat statistic across ALL chunks (one "
                 "scalar rho per decode), so an owner's chunk-slice decode "

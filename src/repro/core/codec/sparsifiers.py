@@ -123,6 +123,64 @@ class RandProjSpatial(RandK):
             schema += (ArraySpec("norm_sq", (n_chunks,), "float32", AUX),)
         return schema
 
+    def encode_flops_per_chunk(self) -> int:
+        """Analytic per-chunk encode flop model: the FWHT's d log2(d)
+        adds plus the sign flip and scale (SparseProj's comparison line)."""
+        return int(self.d_block * (math.log2(self.d_block) + 2))
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseProj(Sparsifier):
+    """Very-sparse random projection (Achlioptas 2003; Li et al. 2006) with
+    the paper's correlation-aware Gram-resolvent decode.
+
+    Each of the k rows of G holds ``nnz = round(d_block / s)`` signed entries
+    of magnitude 1/sqrt(nnz) at key-derived columns (CSR-style column
+    sampling; the classic ±sqrt(s/k) matrix rescaled onto the family's
+    E[G^T G] = (k/d) I, unit-row-norm convention). ``s`` is the density
+    divisor: encode costs O(k d / s) flops vs the SRHT's O(d log d) — the
+    cheap-encode point of the accuracy-vs-compute frontier. The projection
+    is drawn deterministically from the round key, so the server reconstructs
+    it without it ever crossing the wire.
+
+    ``r_mode="est"`` pools its online R-hat across ALL chunks into one scalar
+    rho (sparse rows overlap, so there is no exact per-chunk norm identity to
+    shard on) — that mode is decode-NON-shardable and the ownership gate
+    rejects it by name; the fixed-transform modes shard bitwise.
+    """
+
+    name: ClassVar[str] = "sparse_proj"
+    k: int = 64
+    d_block: int = 1024
+    s: float = 16.0               # density divisor: nnz per row = d_block / s
+    shared_randomness: bool = True
+    transform: str = "avg"        # one|max|avg|opt (wavg resolved by fl.server)
+    r_value: float | None = None
+    r_mode: str = "fixed"         # fixed | est (pooled online R-hat)
+    beta_trials: int | None = None
+    ridge: float = 1e-2           # eps of the resolvent solve (T + eps)
+    cg_iters: int = 64            # CG iteration cap of the decode
+
+    def __post_init__(self):
+        if self.s < 1.0:
+            raise ValueError(f"density divisor s must be >= 1, got {self.s}")
+
+    @property
+    def nnz(self) -> int:
+        """Signed entries per projection row: round(d_block / s), >= 1."""
+        return max(1, min(self.d_block, int(round(self.d_block / self.s))))
+
+    def payload_schema(self, n_chunks: int) -> tuple:
+        schema = (ArraySpec("vals", (n_chunks, self.k), "float32", VALUES),)
+        if self.r_mode == "est":
+            schema += (ArraySpec("norm_sq", (n_chunks,), "float32", AUX),)
+        return schema
+
+    def encode_flops_per_chunk(self) -> int:
+        """Analytic per-chunk encode flop model: one multiply + one add per
+        stored entry, plus the row scale. Strictly decreasing in ``s``."""
+        return int(self.k * (2 * self.nnz + 1))
+
 
 @dataclasses.dataclass(frozen=True)
 class TopK(Sparsifier):
@@ -198,5 +256,6 @@ class Identity(Sparsifier):
 
 SPARSIFIERS: dict[str, type] = {
     cls.name: cls
-    for cls in (RandK, RandKSpatial, RandProjSpatial, TopK, Wangni, Induced, Identity)
+    for cls in (RandK, RandKSpatial, RandProjSpatial, SparseProj, TopK, Wangni,
+                Induced, Identity)
 }

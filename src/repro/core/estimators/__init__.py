@@ -4,7 +4,16 @@ The estimator *API* moved to ``repro.core.codec`` (composable pipelines with
 typed payloads); this package keeps the registered codec implementations and
 the functional wrappers.
 """
-from . import identity, induced, rand_k, rand_k_spatial, rand_proj_spatial, top_k, wangni  # noqa: F401
+from . import (  # noqa: F401
+    identity,
+    induced,
+    rand_k,
+    rand_k_spatial,
+    rand_proj_spatial,
+    sparse_proj,
+    top_k,
+    wangni,
+)
 from .base import (  # noqa: F401
     Codec,
     decode,

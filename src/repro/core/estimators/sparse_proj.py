@@ -1,0 +1,171 @@
+"""SparseProj: very-sparse random projection with the correlation-aware
+Gram-resolvent decode (the cheap-encode member of the Rand-Proj-Spatial
+family — paper §4 framework, Achlioptas 2003 / Li et al. 2006 maps).
+
+Encode (client i):   z_i = G_i x_i, each of G_i's k rows holding ``nnz``
+key-derived columns with Rademacher signs and magnitude 1/sqrt(nnz) —
+unit-norm rows, E[G^T G] = (k/d) I, exactly the family convention the SRHT
+maps satisfy, at O(k nnz) = O(k d / s) encode flops instead of O(d log d).
+
+Decode (server):     x_hat = (beta_eps/n) (T(S) + eps I)^{-1} sum_i G_i^T z_i,
+T(lambda) = 1 - rho + rho lambda, solved matrix-free by the SAME batched
+frozen-chunk CG as the fused SRHT path (``rand_proj_spatial.
+_cg_resolvent_solve`` — per-chunk reductions, converged chunks frozen), so an
+owner's chunk-slice decode is bitwise identical to the same rows of the
+monolithic decode. beta is calibrated from a Monte-Carlo eigenvalue bank of
+the SPARSE ensemble (``beta.sparse_eig_bank``, keyed by density) through the
+shared ridge-compensated ``beta_fn_from_bank`` — the signed-permutation
+invariance argument of docs/DESIGN.md §3.4 applies verbatim to sparse maps,
+so unbiasedness is exact, not approximate.
+
+``r_mode="est"``: sparse rows OVERLAP across clients (G_i G_i^T != I_k), so
+there is no exact per-chunk norm identity to shard the online R-hat on — the
+statistic here uses the exact per-client adjoints and pools ALL chunks into
+one scalar rho. That mode is decode-non-shardable by construction and
+``Pipeline.non_shardable_stage`` declares it (the ownership gate rejects it
+naming this stage); the fixed-transform modes shard bitwise.
+
+Draws are keyed from the round key (client fold_in, then GLOBAL chunk
+position when ``shared_randomness=False``), so the server re-derives every
+projection and only the k values per chunk cross the wire.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels import ops as kops
+from ...obs import record_cg_iters, record_decode_route
+from .. import beta as beta_lib
+from .. import transforms
+from . import base
+from .rand_proj_spatial import _cg_resolvent_solve
+
+
+def _client_draw(spec, ckey):
+    """One (signs, cols) draw for a single client / single chunk.
+
+    cols: (k, nnz) uniform columns per row, sampled WITH replacement (the
+    classic very-sparse-projection draw): O(k nnz) random words, where a
+    distinct-column draw costs a top_k over (k, d) bits — measured ~30x the
+    entire encode at smoke sizes. Within-row duplicates merge by sign
+    addition in the adjoint/Gram (scatter-ADD), and every moment argument
+    below survives: sign independence kills the t != t' cross terms, so
+    E[G^T G] = (k/d) I exactly, and the beta bank simulates THIS sampler.
+    signs: (k, nnz) Rademacher. The 1/sqrt(nnz) magnitude is applied by the
+    kernels-layer ops, not stored.
+    """
+    d, k, nnz = spec.d_block, spec.k, spec.nnz
+    k1, k2 = jax.random.split(ckey)
+    cols = jax.random.randint(k2, (k, nnz), 0, d)
+    signs = jax.random.rademacher(k1, (k, nnz), jnp.float32)
+    return {"cols": cols, "signs": signs}
+
+
+def _draws(spec, key, n, c, client_ids, chunk_offset):
+    """All (client x chunk) draws, stacked: leaves (n, 1, k, nnz) in
+    shared_randomness mode, (n, C, k, nnz) otherwise. Per-chunk draws are
+    keyed by GLOBAL chunk position (chunk_offset + local index), so an
+    owner's slice decode re-derives the full decode's maps."""
+    ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
+    if spec.shared_randomness:
+        draws = jax.vmap(lambda i: _client_draw(spec, base.client_key(key, i)))(ids)
+        return jax.tree.map(lambda v: v[:, None], draws)
+    chunk_ids = chunk_offset + jnp.arange(c)
+
+    def one(i):
+        ckey = base.client_key(key, i)
+        return jax.vmap(lambda cid: _client_draw(spec, base.chunk_key(ckey, cid)))(
+            chunk_ids
+        )
+
+    return jax.vmap(one)(ids)
+
+
+def encode(spec, key, client_id, x_cd):
+    ckey = base.client_key(key, client_id)
+    c = x_cd.shape[0]
+    if spec.shared_randomness:
+        draw = _client_draw(spec, ckey)
+        vals = kops.sparse_proj_encode(x_cd, draw["signs"], draw["cols"])
+    else:
+        keys = jax.vmap(base.chunk_key, in_axes=(None, 0))(ckey, jnp.arange(c))
+        draws = jax.vmap(lambda kk: _client_draw(spec, kk))(keys)
+        vals = kops.sparse_proj_encode(x_cd, draws["signs"], draws["cols"])
+    out = {"vals": vals}
+    if spec.r_mode == "est":
+        out["norm_sq"] = jnp.sum(x_cd.astype(jnp.float32) ** 2, axis=-1)
+    return out
+
+
+def _beta(spec, n, rho, eps):
+    bank = beta_lib.sparse_eig_bank(
+        n, spec.k, spec.d_block, spec.nnz, spec.beta_trials
+    )
+    fn = beta_lib.beta_fn_from_bank(bank, n, spec.d_block, eps=eps)
+    if jnp.ndim(rho) == 0:
+        return fn(rho)
+    return jax.vmap(fn)(rho)
+
+
+def decode(spec, key, payloads, n, client_ids=None, chunk_offset=0):
+    """Gram-resolvent decode, matrix-free over the sparse maps."""
+    record_decode_route("sparse_proj", "resolvent")
+    d, k = spec.d_block, spec.k
+    vals = payloads["vals"].astype(jnp.float32)  # (n, C, k)
+    norm_sq = payloads.get("norm_sq")            # (n, C) or None
+    c = vals.shape[1]
+    draws = _draws(spec, key, n, c, client_ids, chunk_offset)
+    signs, cols = draws["signs"], draws["cols"]
+
+    adj = kops.sparse_proj_adjoint(vals, signs, cols, d)  # (n, C, d)
+    y = jnp.sum(adj, axis=0)                              # (C, d)
+
+    if spec.r_mode == "est":
+        # Pooled online R-hat from the EXACT per-client adjoints (sparse rows
+        # overlap, so ||G_i^T z_i||^2 != ||z_i||^2 and the SRHT path's
+        # per-chunk shortcut does not apply): one scalar rho per decode,
+        # which is WHY this mode is decode-non-shardable (pipeline gate).
+        sc = (d / k) ** 2
+        tot = sc * jnp.sum(y * y)
+        per = sc * jnp.sum(adj * adj)
+        r_hat = (tot - per) / (jnp.sum(norm_sq) + 1e-12)
+        rho = transforms.clip_rho(r_hat / (n - 1.0), n)
+    else:
+        rho = jnp.asarray(transforms.rho_for(spec.transform, n, spec.r_value))
+
+    eps = spec.ridge
+
+    def apply_s(v):
+        return kops.sparse_proj_gram_apply(v, signs, cols)
+
+    xh, cg_it = _cg_resolvent_solve(y, rho, eps, apply_s, spec.cg_iters)
+    record_cg_iters(cg_it)  # eager runs sample; under jit it's a tracer -> dropped
+    b = _beta(spec, n, rho, eps)
+    scale = (b / n) if jnp.ndim(b) == 0 else (b / n)[:, None]
+    return scale * xh
+
+
+def self_decode(spec, key, client_id, payload):
+    """Unbiased per-client reconstruction (d/k) G_i^T z_i.
+
+    E[G^T G] = (k/d) I for the unit-row-norm sparse ensemble, so the family
+    scale d/k makes this the client's unbiased contribution — online-R
+    tracking (fl.server.measure_rho) and error feedback compose unchanged.
+    """
+    ckey = base.client_key(key, client_id)
+    vals = payload["vals"].astype(jnp.float32)  # (C, k)
+    c = vals.shape[0]
+    if spec.shared_randomness:
+        draw = _client_draw(spec, ckey)
+        signs, cols = draw["signs"], draw["cols"]
+    else:
+        keys = jax.vmap(base.chunk_key, in_axes=(None, 0))(ckey, jnp.arange(c))
+        draws = jax.vmap(lambda kk: _client_draw(spec, kk))(keys)
+        signs, cols = draws["signs"], draws["cols"]
+    scale = spec.d_block / spec.k
+    return scale * kops.sparse_proj_adjoint(vals, signs, cols, spec.d_block)
+
+
+CODEC = base.Codec(encode=encode, decode=decode, self_decode=self_decode)
+base.register("sparse_proj", CODEC)

@@ -41,6 +41,7 @@ COMPARE = [
     ("rand_k", dict()),
     ("rand_k_spatial", dict(transform="avg")),
     ("rand_proj_spatial", dict(transform="avg")),
+    ("sparse_proj", dict(transform="avg")),
 ]
 
 
@@ -60,6 +61,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--clients", type=int, default=10,
                     help="cohort size n")
     ap.add_argument("--k", type=int, default=0, help="0 => d_block // 10")
+    ap.add_argument("--budget", default="manual", choices=["manual", "auto"],
+                    help="auto => derive k from the Johnson-Lindenstrauss "
+                         "bound via codec.suggest_budget(n_clients, --jl-eps, "
+                         "d_block), overriding --k; raises "
+                         "BudgetExceedsDimension when the bound does not fit")
+    ap.add_argument("--jl-eps", dest="jl_eps", type=float, default=0.5,
+                    help="JL distortion target for --budget auto")
     ap.add_argument("--d-block", type=int, default=0, help="0 => task dim (<=1024)")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of the cohort sampled per round")
@@ -172,7 +180,11 @@ def make_task(args):
 
 def run_one(task, args, name, est_kw, ctx=None):
     d_block = args.d_block or min(1024, max(64, 1 << (task.dim - 1).bit_length()))
-    k = args.k or max(1, d_block // 10)
+    if getattr(args, "budget", "manual") == "auto":
+        k = codec.suggest_budget(task.n_clients, getattr(args, "jl_eps", 0.5),
+                                 d_block)
+    else:
+        k = args.k or max(1, d_block // 10)
     if getattr(args, "no_fused_kernels", False) and name == "rand_proj_spatial":
         est_kw = dict(est_kw, decode_method="gram")
     spec = codec.build(

@@ -128,7 +128,8 @@ def measure_rho(pipe, key, payloads, ids) -> float | None:
     # de-inflate the denominator: E||self_decode||^2 = (d/k) ||x||^2 for the
     # unbiased sparsifying family, = ||x||^2 for the identity baseline
     scale = 1.0
-    if pipe.name in ("rand_k", "rand_k_spatial", "rand_proj_spatial"):
+    if pipe.name in ("rand_k", "rand_k_spatial", "rand_proj_spatial",
+                     "sparse_proj"):
         scale = pipe.d_block / pipe.k
     r_round = float(correlation.r_exact(recon)) * scale
     return float(np.clip(r_round / (n - 1.0), 0.0, 1.0))

@@ -229,6 +229,59 @@ def srht_gram_apply(
     return _ref.srht_gram_apply_ref(v, signs, mask)
 
 
+# ------------------------------------------------- very-sparse projection ops
+# The SparseProj codec's hot ops (core/estimators/sparse_proj.py). These are
+# gather/scatter bound with O(k * nnz) work per chunk — there is no FWHT-like
+# dense structure for a Pallas kernel to fuse, and XLA already fuses the
+# gather+reduce / scatter-add, so the dispatch is pinned to the XLA path
+# (use_pallas="never"). They still route through ``_dispatch`` so the kernel
+# telemetry (repro.obs) records the decision at trace time like every other
+# op, and a future Pallas lowering slots in without touching callers.
+
+
+def sparse_proj_encode(x: jnp.ndarray, signs: jnp.ndarray, cols: jnp.ndarray) -> jnp.ndarray:
+    """Very-sparse projection encode ``G x``, G rows = nnz signed entries of
+    magnitude 1/sqrt(nnz) at key-derived columns (unit-norm rows).
+
+    x: (..., d); signs, cols: (..., k, nnz) broadcast-aligned. -> (..., k)
+    O(k * nnz) flops per vector vs the SRHT's O(d log d).
+    """
+    nnz = cols.shape[-1]
+    _dispatch("sparse_proj_encode", x.size, "never")
+    out = _ref.sparse_encode_ref(x, signs, cols)
+    return out * jnp.asarray(1.0 / math.sqrt(nnz), out.dtype)
+
+
+def sparse_proj_adjoint(
+    z: jnp.ndarray, signs: jnp.ndarray, cols: jnp.ndarray, d: int
+) -> jnp.ndarray:
+    """Sparse adjoint ``G^T z`` per leading index (no client sum — the decode
+    keeps the per-client scatters for its pooled R-hat statistic).
+
+    z: (..., k); signs, cols: (..., k, nnz) broadcast-aligned (the decode
+    passes (n, C, k) values with (n, C|1, k, nnz) draws). -> (..., d)
+    """
+    _dispatch("sparse_proj_adjoint", z.size, "never")
+    out = _ref.sparse_scatter_add_ref(z, signs, cols, d)
+    nnz = cols.shape[-1]
+    return out * jnp.asarray(1.0 / math.sqrt(nnz), out.dtype)
+
+
+def sparse_proj_gram_apply(
+    v: jnp.ndarray, signs: jnp.ndarray, cols: jnp.ndarray
+) -> jnp.ndarray:
+    """Matrix-free ``S v = sum_i G_i^T G_i v`` for sparse maps — the CG inner
+    apply of the SparseProj resolvent decode.
+
+    v: (C, d); signs, cols: (n, C|1, k, nnz). -> (C, d)
+    """
+    n = signs.shape[0]
+    _dispatch("sparse_proj_gram_apply", n * v.size, "never")
+    nnz = cols.shape[-1]
+    out = _ref.sparse_gram_apply_ref(v, signs, cols)
+    return out * jnp.asarray(1.0 / nnz, out.dtype)
+
+
 def srht_rows_matrix(signs: jnp.ndarray, rows: jnp.ndarray, d: int) -> jnp.ndarray:
     """Materialise G = (1/sqrt(d)) E H D as a (k, d) matrix.
 

@@ -160,6 +160,63 @@ def srht_decode_sum_ref(
     return jnp.sum(out, axis=0)
 
 
+# --------------------------------------------- very-sparse projection oracles
+# Ground truth for the SparseProj codec (core/estimators/sparse_proj.py): each
+# row of G holds ``nnz`` signed entries at key-derived columns, so encode is a
+# gather+reduce, the adjoint is a scatter-add, and the Gram apply composes the
+# two. Scales (1/sqrt(nnz), 1/nnz) are applied by the ops layer as explicit
+# post-multiplies, mirroring the SRHT oracles above.
+
+
+def sparse_encode_ref(x: jnp.ndarray, signs: jnp.ndarray, cols: jnp.ndarray) -> jnp.ndarray:
+    """Unscaled sparse-projection encode ``out[..., r] = sum_t signs[..., r, t]
+    * x[..., cols[..., r, t]]``.
+
+    x: (..., d); signs, cols: (..., k, nnz) — leading dims broadcast-aligned
+    (one independent draw per leading index). -> (..., k)
+    """
+    lead = jnp.broadcast_shapes(x.shape[:-1], cols.shape[:-2], signs.shape[:-2])
+    xb = jnp.broadcast_to(x, lead + x.shape[-1:])
+    cb = jnp.broadcast_to(cols, lead + cols.shape[-2:])
+    t = jnp.take_along_axis(xb[..., None, :], cb, axis=-1)  # (..., k, nnz)
+    return jnp.sum(t * signs, axis=-1)
+
+
+def sparse_scatter_add_ref(
+    z: jnp.ndarray, signs: jnp.ndarray, cols: jnp.ndarray, d: int
+) -> jnp.ndarray:
+    """Unscaled sparse-projection adjoint ``out[..., cols[..., r, t]] +=
+    signs[..., r, t] * z[..., r]``.
+
+    z: (..., k); signs, cols: (..., k, nnz). Columns are sampled with
+    replacement, so they repeat both across AND within rows; the scatter-ADD
+    merges every repeat (within-row duplicates sum their signs), unlike
+    ``srht_scatter_ref``'s disjoint-rows ``set``. -> (..., d)
+    """
+    z = jnp.asarray(z)
+    contrib = z[..., None] * signs                       # (..., k, nnz)
+    cols = jnp.broadcast_to(cols, contrib.shape)
+    cf = cols.reshape(*cols.shape[:-2], -1)              # (..., k*nnz)
+    vf = contrib.reshape(*contrib.shape[:-2], -1)
+    full = jnp.zeros(vf.shape[:-1] + (d,), vf.dtype)
+    idx = tuple(
+        jnp.arange(s).reshape((1,) * i + (s,) + (1,) * (vf.ndim - i - 1))
+        for i, s in enumerate(vf.shape[:-1])
+    )
+    return full.at[idx + (cf,)].add(vf)
+
+
+def sparse_gram_apply_ref(v: jnp.ndarray, signs: jnp.ndarray, cols: jnp.ndarray) -> jnp.ndarray:
+    """Unscaled matrix-free ``sum_i G_i^T G_i v`` for sparse maps (caller
+    multiplies by 1/nnz, the product of the two 1/sqrt(nnz) row scales).
+
+    v: (C, d); signs, cols: (n, C|1, k, nnz). -> (C, d)
+    """
+    z = sparse_encode_ref(v[None], signs, cols)                      # (n, C, k)
+    out = sparse_scatter_add_ref(z, signs, cols, v.shape[-1])        # (n, C, d)
+    return jnp.sum(out, axis=0)
+
+
 def srht_gram_apply_ref(v: jnp.ndarray, signs: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Matrix-free ``S v = sum_i G_i^T G_i v`` for SRHT maps.
 

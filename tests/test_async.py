@@ -143,6 +143,7 @@ NON_STREAMABLE = [
     codec.RandK(k=K, d_block=D, shared_randomness=False),
     codec.Wangni(k=K, d_block=D),
     codec.Induced(k=K, d_block=D),
+    codec.SparseProj(k=K, d_block=D, shared_randomness=False),
 ]
 
 
@@ -161,6 +162,7 @@ def test_overlap_rejects_non_streamable(spec, rng_key, np_rng):
     (codec.RandK(k=K, d_block=D, shared_randomness=False), "RandK"),
     (codec.Wangni(k=K, d_block=D), "Wangni"),
     (codec.Induced(k=K, d_block=D), "Induced"),
+    (codec.SparseProj(k=K, d_block=D, shared_randomness=False), "SparseProj"),
 ])
 def test_check_streamable_names_offending_stage(spec, offender):
     """The rejection must NAME the stage class that breaks streamability and

@@ -268,9 +268,10 @@ def test_compare_metrics_json_is_per_run(tmp_path, capsys):
     data = json.loads(path.read_text())
     assert data["schema_version"] == 2
     labels = [r["estimator"] for r in data["runs"]]
-    assert labels == ["rand_k", "rand_k_spatial", "rand_proj_spatial"]
+    assert labels == ["rand_k", "rand_k_spatial", "rand_proj_spatial",
+                      "sparse_proj"]
     assert data["run"]["estimators"] == labels
-    assert data["run"]["n_rounds"] == 9  # 3 smoke rounds x 3 runs
+    assert data["run"]["n_rounds"] == 12  # 3 smoke rounds x 4 runs
     for entry in data["runs"]:
         assert len(entry["rounds"]) == 3
         encodes = [v for k, v in entry["metrics"]["counters"].items()

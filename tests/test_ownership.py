@@ -108,8 +108,12 @@ ALL_ESTIMATORS = [
     codec.Wangni(k=K, d_block=D),
     codec.Induced(k=K, d_block=D),
     codec.Identity(d_block=D),
+    codec.SparseProj(k=K, d_block=D, transform="avg"),
+    codec.SparseProj(k=K, d_block=D, transform="avg",
+                     shared_randomness=False),
     codec.Pipeline([codec.RandK(k=K, d_block=D), codec.Int8Quant()]),
     codec.Pipeline([codec.RandProjSpatial(k=K, d_block=D), codec.Bf16Quant()]),
+    codec.Pipeline([codec.SparseProj(k=K, d_block=D), codec.Int8Quant()]),
 ]
 
 # rand_proj_spatial's online R-hat is a PER-CHUNK statistic (shardable), but
@@ -180,6 +184,24 @@ def test_sharded_decode_rejects_cross_chunk_statistics(rng_key, np_rng):
                                    chunk_ownership(4, 2))
     assert "decode-shardable" in str(ei.value)
     assert "R-hat" in str(ei.value)
+
+
+def test_sharded_decode_rejects_sparse_proj_pooled_rhat(rng_key, np_rng):
+    """sparse_proj(r_mode='est') pools its exact-adjoint R-hat across ALL
+    chunks into one scalar (sparse rows overlap, so there is no per-chunk
+    norm identity to shard on): the rejection must name SparseProj."""
+    pipe = codec.as_pipeline(
+        codec.SparseProj(k=K, d_block=D, transform="avg", r_mode="est"))
+    assert not pipe.decode_shardable
+    xs = jnp.asarray(np_rng.standard_normal((4, 4, D)), jnp.float32)
+    payloads, _ = pipe.encode_all(rng_key, xs)
+    with pytest.raises(ValueError, match="SparseProj") as ei:
+        collectives.sharded_decode(pipe, rng_key, payloads, 4,
+                                   chunk_ownership(4, 2))
+    assert "decode-shardable" in str(ei.value)
+    assert "R-hat" in str(ei.value)
+    # ...and the fixed-transform modes shard bitwise (ALL_ESTIMATORS above):
+    # the gate is about the pooled statistic, not the sparsifier per se.
 
 
 # ------------------------------------------------------- tree-level ownership

@@ -17,7 +17,7 @@ def _tree(seed=0):
     return {"w": jnp.asarray(rng.standard_normal((N, D_FLAT)), jnp.float32)}
 
 
-@pytest.mark.parametrize("name", ["rand_k", "rand_proj_spatial"])
+@pytest.mark.parametrize("name", ["rand_k", "rand_proj_spatial", "sparse_proj"])
 @pytest.mark.parametrize("k", [32, 64, 128])
 def test_bytes_sent_scales_as_k_over_d_block(name, k):
     spec = codec.build(name, k=k, d_block=D_BLOCK)
@@ -45,7 +45,7 @@ def test_top_k_payload_counts_transmitted_indices():
     assert info["payload_bytes_per_client"] == info["n_chunks"] * k * (4 + 4)
 
 
-@pytest.mark.parametrize("name", ["rand_k", "rand_proj_spatial"])
+@pytest.mark.parametrize("name", ["rand_k", "rand_proj_spatial", "sparse_proj"])
 def test_payload_dtype_quantization_savings(name):
     k = 128
     trees = {}
@@ -59,3 +59,38 @@ def test_payload_dtype_quantization_savings(name):
     # int8: 1 byte per value + one f32 scale per chunk
     assert trees["int8"] == c * (k + 4)
     assert trees["float32"] / trees["int8"] > 3.5  # ~4x fewer bytes
+
+
+def test_sparse_proj_ledger_honest_across_densities():
+    """SparseProj's density ``s`` is a server-side reconstruction parameter,
+    never a wire one: clients running heterogeneous densities declare and
+    ship IDENTICAL byte counts (the column draws are key-derived, only the k
+    values travel), and every payload matches its declared schema exactly."""
+    key = jax.random.key(0)
+    rng = np.random.default_rng(3)
+    c = D_FLAT // D_BLOCK
+    x = jnp.asarray(rng.standard_normal((c, D_BLOCK)), jnp.float32)
+    sizes = set()
+    for client_id, s in enumerate((1.0, 4.0, 16.0, 64.0)):
+        pipe = codec.as_pipeline(codec.SparseProj(k=64, d_block=D_BLOCK, s=s))
+        payload = pipe.encode_payload(key, client_id, x)
+        assert codec.check_against_schema(payload) == []
+        assert payload.nbytes == pipe.payload_nbytes(c)
+        sizes.add(payload.nbytes)
+    assert len(sizes) == 1, sizes
+
+
+def test_sparse_proj_est_mode_declares_aux_norms():
+    """r_mode='est' ships one f32 norm per chunk on top of the k values —
+    the declared ledger must charge it, not hide it."""
+    key = jax.random.key(1)
+    rng = np.random.default_rng(4)
+    c = D_FLAT // D_BLOCK
+    x = jnp.asarray(rng.standard_normal((c, D_BLOCK)), jnp.float32)
+    fixed = codec.as_pipeline(codec.SparseProj(k=64, d_block=D_BLOCK))
+    est = codec.as_pipeline(codec.SparseProj(k=64, d_block=D_BLOCK,
+                                             r_mode="est"))
+    payload = est.encode_payload(key, 0, x)
+    assert codec.check_against_schema(payload) == []
+    assert payload.nbytes == est.payload_nbytes(c)
+    assert est.payload_nbytes(c) == fixed.payload_nbytes(c) + c * 4

@@ -1,0 +1,113 @@
+"""codec.suggest_budget: the Johnson-Lindenstrauss budget auto-picker.
+
+Golden closed-form values, the monotonicity contract, the named
+BudgetExceedsDimension error (with its actionable loosen-eps hint), and the
+round trip through ``fl.run --budget auto``.
+"""
+import math
+
+import pytest
+
+from repro.core import codec
+from repro.core.codec.budget import jl_min_k
+
+# hand-computed goldens: ceil(4 ln(n) / (eps^2/2 - eps^3/3))
+GOLDEN = [
+    (10, 0.5, 111),
+    (100, 0.5, 222),
+    (10, 0.3, 256),
+    (2, 0.5, 34),
+    (1000, 0.9, 171),
+]
+
+
+@pytest.mark.parametrize("n,eps,want", GOLDEN)
+def test_jl_min_k_matches_closed_form(n, eps, want):
+    assert jl_min_k(n, eps) == want
+    # and the formula itself, independently of the goldens
+    denom = eps**2 / 2.0 - eps**3 / 3.0
+    assert jl_min_k(n, eps) == math.ceil(4.0 * math.log(n) / denom)
+
+
+def test_suggest_budget_returns_bound_when_it_fits():
+    assert codec.suggest_budget(10, 0.5, 128) == 111
+    assert codec.suggest_budget(10, 0.5, 111) == 111  # boundary: k == d fits
+
+
+def test_monotone_in_n_clients():
+    ks = [codec.suggest_budget(n, 0.5, 4096) for n in (2, 5, 10, 100, 10_000)]
+    assert ks == sorted(ks)
+    assert ks[0] < ks[-1]
+
+
+def test_monotone_in_eps():
+    ks = [codec.suggest_budget(50, eps, 100_000)
+          for eps in (0.05, 0.1, 0.2, 0.5, 0.9)]
+    assert ks == sorted(ks, reverse=True)
+    assert ks[0] > ks[-1]
+
+
+def test_raises_named_error_when_bound_exceeds_dimension():
+    with pytest.raises(codec.BudgetExceedsDimension) as ei:
+        codec.suggest_budget(10, 0.3, 128)  # bound is 256 > 128
+    msg = str(ei.value)
+    assert "k=256" in msg and "d=128" in msg
+    assert "loosen eps" in msg
+    # the hint is actionable: the suggested eps actually fits
+    hint = float(msg.split(">= ")[1].split()[0])
+    assert codec.suggest_budget(10, hint, 128) <= 128
+    # it is a ValueError so generic callers need no new except clause
+    assert isinstance(ei.value, ValueError)
+
+
+@pytest.mark.parametrize("bad_eps", [0.0, 1.0, -0.1, 1.5])
+def test_rejects_out_of_range_eps(bad_eps):
+    with pytest.raises(ValueError, match="eps"):
+        codec.suggest_budget(10, bad_eps, 128)
+
+
+def test_rejects_degenerate_cohort_and_dimension():
+    with pytest.raises(ValueError, match="n_clients"):
+        codec.suggest_budget(1, 0.5, 128)
+    with pytest.raises(ValueError, match="d must be"):
+        codec.suggest_budget(10, 0.5, 0)
+
+
+# ------------------------------------------------------- fl.run --budget auto
+
+
+def test_budget_auto_round_trips_through_fl_run():
+    """--budget auto must hand the decoded spec EXACTLY the JL k (smoke dme:
+    d_block = 128, 10 clients, default --jl-eps 0.5 => k = 111), overriding
+    --k entirely."""
+    from repro.fl import run as fl_run
+
+    args = fl_run.build_parser().parse_args(
+        ["--task", "dme", "--smoke", "--budget", "auto", "--k", "7"])
+    task = fl_run.make_task(args)
+    spec, _, hist = fl_run.run_one(task, args, "rand_k", {})
+    assert spec.k == codec.suggest_budget(task.n_clients, 0.5, spec.d_block)
+    assert spec.k == 111
+    assert len(hist.mse) == 3  # the run actually went through
+
+
+def test_budget_auto_propagates_named_error():
+    """An unattainable --jl-eps fails loudly with the named error, not a
+    silently clamped k."""
+    from repro.fl import run as fl_run
+
+    args = fl_run.build_parser().parse_args(
+        ["--task", "dme", "--smoke", "--budget", "auto", "--jl-eps", "0.3"])
+    task = fl_run.make_task(args)
+    with pytest.raises(codec.BudgetExceedsDimension):
+        fl_run.run_one(task, args, "rand_k", {})
+
+
+def test_budget_manual_ignores_jl_eps():
+    from repro.fl import run as fl_run
+
+    args = fl_run.build_parser().parse_args(
+        ["--task", "dme", "--smoke", "--k", "16", "--jl-eps", "0.3"])
+    task = fl_run.make_task(args)
+    spec, _, _ = fl_run.run_one(task, args, "rand_k", {})
+    assert spec.k == 16

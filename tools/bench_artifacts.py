@@ -1,17 +1,21 @@
 #!/usr/bin/env python
 """Benchmark-artifact post-processing for CI (schema v1).
 
-    python tools/bench_artifacts.py extract ownership results/BENCH_smoke.json
-    python tools/bench_artifacts.py extract kernels   results/BENCH_smoke.json
+    python tools/bench_artifacts.py extract ownership  results/BENCH_smoke.json
+    python tools/bench_artifacts.py extract kernels    results/BENCH_smoke.json
+    python tools/bench_artifacts.py extract sparseproj results/BENCH_smoke.json
     python tools/bench_artifacts.py validate results/*.json
 
 ``extract`` pulls one benchmark section out of a full BENCH artifact into
-its own derived artifact (OWNERSHIP_<mode>.json / KERNELS_<mode>.json),
-carrying the parent's schema stamp and run metadata forward so a derived
-artifact is self-describing. The ``kernels`` extraction also enforces the
-fused-decode perf gate: every ``kernel_fused/...​/fused`` row must beat its
-``/unfused`` sibling, or the exit code is non-zero — a perf regression in
-kernels/srht_fused.py or its dispatch fails CI here first.
+its own derived artifact (OWNERSHIP_<mode>.json / KERNELS_<mode>.json /
+SPARSEPROJ_<mode>.json), carrying the parent's schema stamp and run metadata
+forward so a derived artifact is self-describing. Two extractions also
+enforce perf gates: ``kernels`` requires every ``kernel_fused/...​/fused``
+row to beat its ``/unfused`` sibling (a regression in kernels/srht_fused.py
+or its dispatch fails CI here first), and ``sparseproj`` requires the
+SparseProj encode row to beat the SRHT encode row at equal budget in both
+wall-clock and declared flops — the cheap-encode claim, continuously
+measured.
 
 ``validate`` is the upload gate: every artifact CI archives must carry
 ``schema_version`` (currently 1), the ``run`` metadata stamp
@@ -87,8 +91,46 @@ def extract_kernels(doc: dict, path: str) -> dict:
     return _derived(doc, rows)
 
 
+def _derived_field(row: dict, key: str, path: str) -> float:
+    """Pull ``key=<number>`` out of a row's semicolon-packed derived column."""
+    for part in row.get("derived", "").split(";"):
+        if part.startswith(key + "="):
+            return float(part[len(key) + 1:])
+    _fail(f"{path}: row {row['name']!r} missing {key}= in derived column")
+
+
+def extract_sparseproj(doc: dict, path: str) -> dict:
+    """Cheap-encode gate: the ``sparseproj/encode/.../sparse_proj`` row must
+    exist and beat its ``/srht`` sibling in BOTH wall-clock (us_per_call) and
+    declared flops (flops_per_chunk in the derived column) — a missing row or
+    a slower-than-SRHT sparse encode fails the bench-smoke job here."""
+    rows = [r for r in doc["rows"] if r["name"].startswith("sparseproj/")]
+    if not rows:
+        _fail(f"{path}: bench_systems.sparseproj_encode produced no rows")
+    by_name = {r["name"]: r for r in rows}
+    gated = [n for n in by_name if n.endswith("/sparse_proj")]
+    if not gated:
+        _fail(f"{path}: no sparseproj/.../sparse_proj row to gate on")
+    for name in gated:
+        sibling = name[: -len("/sparse_proj")] + "/srht"
+        if sibling not in by_name:
+            _fail(f"{path}: missing srht sibling for {name}")
+        sp, srht = by_name[name], by_name[sibling]
+        if sp["us_per_call"] >= srht["us_per_call"]:
+            _fail(f"sparse encode walltime regression: {name} "
+                  f"{sp['us_per_call']:.1f}us >= {sibling} "
+                  f"{srht['us_per_call']:.1f}us")
+        sp_fl = _derived_field(sp, "flops_per_chunk", path)
+        srht_fl = _derived_field(srht, "flops_per_chunk", path)
+        if sp_fl >= srht_fl:
+            _fail(f"sparse encode flops regression: {name} {sp_fl:.0f} >= "
+                  f"{sibling} {srht_fl:.0f}")
+    return _derived(doc, rows)
+
+
 _SECTIONS = {"ownership": (extract_ownership, "OWNERSHIP"),
-             "kernels": (extract_kernels, "KERNELS")}
+             "kernels": (extract_kernels, "KERNELS"),
+             "sparseproj": (extract_sparseproj, "SPARSEPROJ")}
 
 
 def main() -> None:
