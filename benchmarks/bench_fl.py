@@ -29,7 +29,22 @@ ESTIMATORS = [
     ("rand_proj_spatial", dict(transform="wavg"), False),
     ("rand_proj_spatial", dict(transform="avg"), True),  # temporal decode
     ("sparse_proj", dict(transform="avg"), False),       # cheap-encode row
+    # quantized + entropy-coded wire rows: the coded_bytes ledger and the
+    # bytes-to-target-at-coded-bytes column (docs/EXPERIMENTS.md)
+    ("rand_k", dict(payload_dtype="int8", entropy_code=True), False),
+    ("rand_k", dict(payload_dtype="correlated", entropy_code=True), False),
 ]
+
+
+def _tag(est, kw, temporal):
+    """Row label: estimator.transform plus quantizer / coded markers, so the
+    quantized variants never collide with the float32 row of the same name."""
+    tag = f"{est}.{kw.get('transform', 'one')}"
+    if kw.get("payload_dtype", "float32") != "float32":
+        tag += f".{kw['payload_dtype']}"
+    if kw.get("entropy_code"):
+        tag += ".coded"
+    return tag + (".temporal" if temporal else "")
 
 # (task factory kwargs, d_block, k, rounds, bytes-to-target threshold)
 SETUPS = {
@@ -53,14 +68,16 @@ def run_setup(out, name, task_kw, d_block, k, n_rounds, target, cohort=None):
         state, hist = run_rounds(task, pipe, cohort, cfg)
         us_round = (time.time() - t0) / n_rounds * 1e6
         final = "nan" if task.metric is None else f"{hist.metric[-1]:.5f}"
-        btt = "n/a"
+        btt, btt_coded = "n/a", "n/a"
         if target is not None:
             got = hist.bytes_to_target(target)
             btt = str(got) if got is not None else "never"
-        tag = f"{est}.{kw.get('transform', 'one')}" + (".temporal" if temporal else "")
-        rows(out, f"fl/{name}/{tag}", us_round,
+            got_c = hist.bytes_to_target(target, bytes_key="coded_bytes")
+            btt_coded = str(got_c) if got_c is not None else "never"
+        rows(out, f"fl/{name}/{_tag(est, kw, temporal)}", us_round,
              f"final={final};mean_mse={np.nanmean(hist.mse):.6f};"
-             f"bytes={hist.total_bytes};bytes_to_target={btt}")
+             f"bytes={hist.total_bytes};coded_bytes={hist.total_coded_bytes};"
+             f"bytes_to_target={btt};bytes_to_target_coded={btt_coded}")
 
 
 def client_temporal(out, n_rounds=20):

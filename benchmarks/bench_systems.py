@@ -201,6 +201,64 @@ def sparseproj_encode(out, k=64, d=1024, n_chunks=4, s=32.0):
              f"compile_us={comp * 1e6:.0f}")
 
 
+def quant(out, n=8, k=256, d=1024, n_chunks=4, trials=8):
+    """Correlated-quantization + entropy-coding rows behind the CI
+    ``QUANT_smoke.json`` artifact (``tools/bench_artifacts.py extract
+    quant``).
+
+    ``quant/mse`` rows measure the pure QUANTIZATION error: the same round
+    keys drive the quantized and the unquantized pipeline (identical
+    sparsifier draws), so ``mean |est_q - est_f|^2`` isolates the rounding
+    noise from the sparsifier noise that otherwise dominates total MSE. The
+    gated setting is the identity sparsifier — full-vector quantization DME,
+    where every client quantizes the SAME coordinate at the same dither
+    position, which is exactly where Suresh et al.'s anti-correlated offsets
+    cancel in the cohort mean. (Composed with per-client supports — rand_k
+    permutations, top-k selections — clients' dither positions never meet at
+    an output coordinate, so CorrelatedQuant matches Int8Quant's independent
+    stochastic rounding there instead of beating it; it never does worse.)
+    The gate requires every ``/correlated`` row to strictly beat its
+    ``/int8`` sibling at IDENTICAL wire bytes.
+
+    ``quant/coded`` rows charge each payload stack at its EXACT entropy-coded
+    stream length (codec.coded_payload_nbytes) next to the raw schema size;
+    the gate requires coded <= raw for every row (float arrays ride raw and
+    headerless, so a float-only payload is charged exactly its raw size).
+    """
+    rng = np.random.default_rng(13)
+    base = rng.standard_normal((n_chunks, d)).astype(np.float32)
+    xs = jnp.asarray(
+        np.stack([base + 0.25 * rng.standard_normal((n_chunks, d))
+                  for _ in range(n)]), jnp.float32)
+    raw_pipe = codec.build("identity", d_block=d)
+    for qname in ("int8", "correlated"):
+        pipe = codec.build("identity", d_block=d, payload_dtype=qname)
+        err = 0.0
+        for t in range(2 * trials):
+            kk = jax.random.key(100 + t)
+            p_q, _ = pipe.encode_all(kk, xs)
+            p_f, _ = raw_pipe.encode_all(kk, xs)
+            est_q = pipe.decode_payload(kk, p_q, n)
+            est_f = raw_pipe.decode_payload(kk, p_f, n)
+            err += float(jnp.mean((est_q - est_f) ** 2))
+        rows(out, f"quant/mse/n{n}_d{d}_C{n_chunks}/identity/{qname}",
+             0, f"mean_mse={err / (2 * trials):.9f};paired_keys={2 * trials}")
+    for sp_name in ("rand_k", "top_k"):
+        for qname in ("none", "bfloat16", "int8", "correlated"):
+            dtype = "float32" if qname == "none" else qname
+            pipe_nc = codec.build(sp_name, k=k, d_block=d, payload_dtype=dtype)
+            pipe = codec.build(sp_name, k=k, d_block=d, payload_dtype=dtype,
+                               entropy_code=True)
+            kk = jax.random.key(200)
+            payloads, _ = pipe.encode_all(kk, xs)
+            coded = codec.coded_payload_nbytes(pipe, payloads)
+            raw = pipe_nc.payload_nbytes(n_chunks) * n
+            rows(out,
+                 f"quant/coded/n{n}_k{k}_d{d}_C{n_chunks}/{sp_name}/{qname}",
+                 0, f"coded_bytes={coded};raw_bytes={raw};"
+                    f"ratio={coded / raw:.3f}")
+
+
 def run(out):
     walltime(out)
     rank_s(out)
@@ -209,3 +267,4 @@ def run(out):
     ownership(out)
     fused_kernels(out)
     sparseproj_encode(out)
+    quant(out)

@@ -45,6 +45,7 @@ def smoke(out: list[str]) -> None:
     bench_systems.ownership(out, n=8, k=64, d=128, n_chunks=8)
     bench_systems.fused_kernels(out, n=8, k=32, d=512, n_chunks=4)
     bench_systems.sparseproj_encode(out)  # full-size: the gate needs margin
+    bench_systems.quant(out)  # full-size: the MSE + coded<=raw gates need margin
 
     from . import bench_fl
 

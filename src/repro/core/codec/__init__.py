@@ -20,8 +20,14 @@ memories) lives in an explicit ``ClientState`` pytree. ``build(name,
 **old_kwargs)`` (see compat) keeps the historical flat-keyword construction
 style working; the flat ``EstimatorSpec`` class itself is removed.
 """
-from .budget import BudgetExceedsDimension, jl_min_k, suggest_budget  # noqa: F401
+from .budget import (  # noqa: F401
+    BudgetExceedsDimension,
+    adaptive_chunk_budgets,
+    jl_min_k,
+    suggest_budget,
+)
 from .compat import as_pipeline, build  # noqa: F401
+from .entropy import EntropyCode, coded_payload_nbytes  # noqa: F401
 from .payload import (  # noqa: F401
     AUX,
     INDICES,
@@ -34,7 +40,12 @@ from .payload import (  # noqa: F401
     with_staleness,
 )
 from .pipeline import Pipeline  # noqa: F401
-from .quantizers import QUANTIZERS, Bf16Quant, Int8Quant  # noqa: F401
+from .quantizers import (  # noqa: F401
+    QUANTIZERS,
+    Bf16Quant,
+    CorrelatedQuant,
+    Int8Quant,
+)
 from .sparsifiers import (  # noqa: F401
     SPARSIFIERS,
     Identity,

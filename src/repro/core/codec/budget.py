@@ -10,10 +10,19 @@ points to within a (1 ± eps) factor w.h.p. once
 so for distributed mean estimation over ``n_clients`` vectors, requesting
 distortion ``eps`` pins the per-chunk budget. ``fl.run --budget auto`` wires
 this as the CLI entry point.
+``adaptive_chunk_budgets`` is the other budget rule in this module: given a
+fixed TOTAL budget ``C * k``, reallocate it across the C chunks proportional
+to per-chunk norm mass (largest-remainder rounding, every chunk in
+[1, d_block]) — the per-chunk adaptive budgets ``RoundConfig(
+adaptive_budgets=True)`` derives each round from the server's previous mean.
+Conservation ``sum(k_c) == C * k`` makes it a pure reallocation: wire bytes
+are unchanged, only where they are spent moves.
 """
 from __future__ import annotations
 
 import math
+
+import numpy as np
 
 
 class BudgetExceedsDimension(ValueError):
@@ -44,21 +53,34 @@ def suggest_budget(n_clients: int, eps: float, d: int) -> int:
         raise ValueError(f"d must be >= 1, got {d}")
     k = jl_min_k(n_clients, eps)
     if k > d:
-        raise BudgetExceedsDimension(
+        prefix = (
             f"JL bound needs k={k} coordinates for n_clients={n_clients} at "
-            f"eps={eps}, but the chunk only has d={d}; loosen eps (>= "
-            f"{_min_feasible_eps(n_clients, d):.3f} suffices) or send "
+            f"eps={eps}, but the chunk only has d={d}; "
+        )
+        feasible = _min_feasible_eps(n_clients, d)
+        if feasible is None:
+            # even eps -> 1 does not fit: no amount of loosening helps, so do
+            # not hint a fake threshold (the old message said ">= 0.999
+            # suffices", which was false)
+            raise BudgetExceedsDimension(
+                prefix + "no eps in (0, 1) fits this (n_clients, d) — shrink "
+                "the cohort or send uncompressed"
+            )
+        raise BudgetExceedsDimension(
+            prefix + f"loosen eps (>= {feasible:.3f} suffices) or send "
             "uncompressed"
         )
     return k
 
 
-def _min_feasible_eps(n_clients: int, d: int, tol: float = 1e-3) -> float:
+def _min_feasible_eps(n_clients: int, d: int, tol: float = 1e-3) -> float | None:
     """Smallest eps (to ``tol``) whose JL bound fits in d — for the error
-    message's actionable hint; bisection on the monotone bound."""
+    message's actionable hint; bisection on the monotone bound. Returns None
+    when NO eps in (0, 1) fits (``jl_min_k(n, 1 - tol) > d``) so the caller
+    does not hint an eps that cannot work."""
     lo, hi = tol, 1.0 - tol
     if jl_min_k(n_clients, hi) > d:
-        return hi
+        return None
     while hi - lo > tol:
         mid = (lo + hi) / 2.0
         if jl_min_k(n_clients, mid) > d:
@@ -66,3 +88,44 @@ def _min_feasible_eps(n_clients: int, d: int, tol: float = 1e-3) -> float:
         else:
             hi = mid
     return hi
+
+
+def adaptive_chunk_budgets(norm_mass, k: int, d_block: int) -> tuple:
+    """Per-chunk budgets ``(k_0, ..., k_{C-1})`` proportional to norm mass.
+
+    Splits the fixed total ``C * k`` across chunks with quota
+    ``total * mass_c / sum(mass)``, rounded by largest remainder so the
+    total is conserved EXACTLY, with every chunk clamped into
+    ``[1, d_block]`` (a chunk never goes dark, never exceeds its dimension).
+    Zero/degenerate mass falls back to the uniform allocation. Deterministic
+    pure-host arithmetic: both sides of the wire derive the identical tuple
+    from the shared previous-round mean.
+    """
+    mass = np.asarray(norm_mass, dtype=np.float64).ravel()
+    c = int(mass.size)
+    if c == 0:
+        raise ValueError("need at least one chunk to allocate budgets over")
+    if not 1 <= k <= d_block:
+        raise ValueError(f"need 1 <= k <= d_block, got k={k}, d_block={d_block}")
+    total = c * k
+    if not np.all(np.isfinite(mass)) or np.any(mass < 0) or mass.sum() <= 0:
+        return (k,) * c
+    quota = np.clip(total * mass / mass.sum(), 1.0, float(d_block))
+    base = np.clip(np.floor(quota).astype(np.int64), 1, d_block)
+    rem = total - int(base.sum())
+    frac = quota - np.floor(quota)
+    if rem > 0:
+        for j in np.argsort(-frac, kind="stable").tolist() * total:
+            if rem == 0:
+                break
+            if base[j] < d_block:
+                base[j] += 1
+                rem -= 1
+    elif rem < 0:
+        for j in np.argsort(frac, kind="stable").tolist() * total:
+            if rem == 0:
+                break
+            if base[j] > 1:
+                base[j] -= 1
+                rem += 1
+    return tuple(int(b) for b in base)

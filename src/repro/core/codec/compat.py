@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from .entropy import EntropyCode
 from .pipeline import Pipeline
 from .quantizers import QUANTIZERS
 from .sparsifiers import SPARSIFIERS, Sparsifier
@@ -54,6 +55,7 @@ def build(name: str, **kw) -> Pipeline:
     payload_dtype = kw.pop("payload_dtype", "float32")
     ef = kw.pop("ef", False)
     temporal = kw.pop("temporal", False)
+    entropy_code = kw.pop("entropy_code", False)
     cls = SPARSIFIERS[name]
     fields = {f.name for f in dataclasses.fields(cls)}
     cfg_kw = {}
@@ -79,6 +81,8 @@ def build(name: str, **kw) -> Pipeline:
         stages.append(ErrorFeedback())
     if temporal:
         stages.append(Temporal())
+    if entropy_code:
+        stages.append(EntropyCode())
     return Pipeline(tuple(stages))
 
 

@@ -68,6 +68,7 @@ class PayloadMeta:
     stages: tuple = ()               # stage names, encode order
     schema: tuple = ()               # tuple[ArraySpec, ...]: declared wire format
     staleness: int = 0               # rounds between encode and decode (0 = fresh)
+    chunk_budgets: tuple | None = None  # adaptive per-chunk (k_0..k_{C-1})
 
     @property
     def declared_nbytes(self) -> int:

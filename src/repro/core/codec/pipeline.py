@@ -44,7 +44,8 @@ class Pipeline:
         by_role: dict = {}
         for s in self.stages:
             role = getattr(s, "role", None)
-            if role not in ("sparsify", "quantize", "feedback", "temporal"):
+            if role not in ("sparsify", "quantize", "feedback", "temporal",
+                            "code"):
                 raise TypeError(f"{s!r} is not a codec stage (role={role!r})")
             by_role.setdefault(role, []).append(s)
             if len(by_role[role]) > 1:
@@ -69,6 +70,11 @@ class Pipeline:
     @property
     def temporal_stage(self):
         return next((s for s in self.stages if s.role == "temporal"), None)
+
+    @property
+    def code_stage(self):
+        """The entropy-coding (wire-accounting) stage, or None."""
+        return next((s for s in self.stages if s.role == "code"), None)
 
     @property
     def has_ef(self) -> bool:
@@ -107,8 +113,14 @@ class Pipeline:
                 "chunk slice encodes differently than the same rows of the "
                 "full array"
             )
+        if getattr(sp, "chunk_budgets", None) is not None:
+            return sp, (
+                "allocates an explicit per-chunk budget vector over the FULL "
+                "chunk axis (adaptive budgets), so a chunk slice's flat "
+                "payload layout depends on the other chunks' budgets"
+            )
         q = self.quantizer
-        if q is not None and q.name == "int8":
+        if q is not None and q.name in ("int8", "correlated"):
             return q, (
                 "draws stochastic-rounding noise over the full array shape, "
                 "so a chunk slice draws different noise"
@@ -148,6 +160,12 @@ class Pipeline:
                 "pools its online R-hat statistic across ALL chunks (one "
                 "scalar rho per decode), so an owner's chunk-slice decode "
                 "would estimate a different rho than the full decode"
+            )
+        if getattr(sp, "chunk_budgets", None) is not None:
+            return sp, (
+                "packs adaptive per-chunk budgets into ONE flat value row "
+                "(no per-chunk payload axis), so an owner cannot slice out "
+                "just its own chunks' rows"
             )
         return None
 
@@ -220,6 +238,7 @@ class Pipeline:
             d_block=self.d_block,
             stages=tuple(s.name for s in self.stages),
             schema=self.payload_schema(n_chunks),
+            chunk_budgets=getattr(self.sparsifier, "chunk_budgets", None),
         )
 
     def payload_nbytes(self, n_chunks: int) -> int:
@@ -232,9 +251,17 @@ class Pipeline:
         """sparsify + quantize one client's (C, d_block) chunks."""
         arrays = self.sparsifier.encode(key, client_id, x_cd)
         meta = self.payload_meta(x_cd.shape[0])
-        if self.quantizer is not None:
+        q = self.quantizer
+        if q is not None:
             qkey = est_base.client_key(key, client_id)
-            arrays = self.quantizer.encode(qkey, arrays, meta.value_names)
+            if getattr(q, "needs_round_key", False):
+                # cohort-correlated quantizers derive their shared dither
+                # from the ROUND key (constant across the vmapped cohort)
+                # plus the client id — never from the per-client qkey alone
+                arrays = q.encode(qkey, arrays, meta.value_names,
+                                  round_key=key, client_id=client_id)
+            else:
+                arrays = q.encode(qkey, arrays, meta.value_names)
         return Payload(arrays=arrays, meta=meta)
 
     def _for_payload(self, payload) -> "Pipeline":
@@ -242,7 +269,12 @@ class Pipeline:
         meta = meta_of(payload)
         if meta is None:
             return self
-        return self.with_budget(meta.budget)
+        pipe = self.with_budget(meta.budget)
+        cb = getattr(meta, "chunk_budgets", None)
+        if cb != getattr(pipe.sparsifier, "chunk_budgets", None) and \
+                hasattr(pipe.sparsifier, "chunk_budgets"):
+            pipe = pipe.replace_sparsifier(chunk_budgets=cb)
+        return pipe
 
     def _dequantize(self, payload) -> dict:
         arrays = arrays_of(payload)

@@ -30,7 +30,10 @@ _SALTS = {"vals": 101, "top_vals": 211, "rand_vals": 307}
 
 
 def _salt(name: str) -> int:
-    return _SALTS.get(name, int(zlib.crc32(name.encode()) & 0x7FFFFFF))
+    # full 31-bit mask: an earlier 0x7FFFFFF (27-bit) typo needlessly raised
+    # collision odds for non-canonical array names; the named _SALTS keep the
+    # historical payload_dtype bit-compat regardless of the mask
+    return _SALTS.get(name, int(zlib.crc32(name.encode()) & 0x7FFFFFFF))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,4 +108,76 @@ class Int8Quant:
         return tuple(out)
 
 
-QUANTIZERS = {"bfloat16": Bf16Quant, "int8": Int8Quant}
+# golden-ratio low-discrepancy rotation of the dither grid (Suresh et al.
+# 2022, arXiv:2203.04925): client i's rounding offset frac((i+1) * phi) is
+# maximally spread over [0, 1) for every cohort prefix, with no dependence on
+# the cohort size or the client's rank in it — so every re-derivation path
+# (rho measurement, stale decode, the dist memory mirror) reproduces the
+# exact encode bits from (round_key, client_id) alone.
+_PHI = 0.6180339887498949
+# fold_in tag separating the cohort-shared dither stream from the per-client
+# qkey stream (client ids are small ints; this is far outside that range)
+_COHORT_SALT = 0x0C011EC7
+
+
+@dataclasses.dataclass(frozen=True)
+class CorrelatedQuant(Int8Quant):
+    """Correlated int8 quantization (Suresh et al. 2022): same wire format as
+    ``Int8Quant`` (int8 values + per-chunk float32 scale, byte-identical
+    ledger), but the stochastic-rounding dither is SHARED across the cohort —
+    one uniform draw from the round key — and each client rotates it by a
+    golden-ratio offset ``frac((client_id + 1) * phi)``.
+
+    Each client's dither stays marginally U[0, 1) (a constant shift mod 1),
+    so every unbiased sparsifier x CorrelatedQuant composition stays unbiased
+    per client exactly as with Int8Quant. Where clients quantize the SAME
+    coordinate at the same dither position (full-vector DME — the identity
+    sparsifier — or any shared-support codec) the rounding errors
+    anti-correlate: the offsets stratify [0, 1), so the SUM of the rounding
+    errors concentrates instead of growing like sqrt(n) — strictly better
+    mean-MSE than independent Int8 at equal bytes (gated continuously by
+    ``bench_artifacts.py extract quant``). Composed with per-client supports
+    (rand_k permutations, top-k selections) the dither positions never meet
+    at an output coordinate, and CorrelatedQuant matches independent
+    stochastic rounding instead of beating it; it never does worse.
+
+    Needs cohort context: ``Pipeline.encode_payload`` threads the shared
+    round key + client id in; constructing the dither from the per-client
+    qkey alone would silently degenerate to independent rounding, so encoding
+    without them raises instead.
+    """
+
+    role: ClassVar[str] = "quantize"
+    name: ClassVar[str] = "correlated"
+    needs_round_key: ClassVar[bool] = True
+
+    def encode(self, qkey, arrays: dict, value_names, *, round_key=None,
+               client_id=None) -> dict:
+        if round_key is None or client_id is None:
+            raise ValueError(
+                "CorrelatedQuant needs the shared round key and the client id "
+                "(anti-correlated dither is a cohort-level construction); "
+                "encode through Pipeline.encode_payload / encode_all"
+            )
+        offset = jnp.mod(
+            (jnp.asarray(client_id, jnp.float32) + 1.0) * _PHI, 1.0
+        )
+        dither_key = jax.random.fold_in(round_key, _COHORT_SALT)
+        out = {}
+        for n, v in arrays.items():
+            if n not in value_names:
+                out[n] = v
+                continue
+            scale = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0 + 1e-12
+            shared = jax.random.uniform(
+                jax.random.fold_in(dither_key, _salt(n)), v.shape
+            )
+            u = jnp.mod(shared + offset, 1.0)  # marginally U[0,1) per client
+            q = jnp.floor(v / scale + u)
+            out[n] = jnp.clip(q, -128, 127).astype(jnp.int8)
+            out[n + "_scale"] = scale.astype(jnp.float32)
+        return out
+
+
+QUANTIZERS = {"bfloat16": Bf16Quant, "int8": Int8Quant,
+              "correlated": CorrelatedQuant}

@@ -64,21 +64,77 @@ class Sparsifier:
     def payload_schema(self, n_chunks: int) -> tuple:
         raise NotImplementedError
 
+    @property
+    def self_decode_norm_inflation(self) -> float:
+        """``E||self_decode(x)||^2 / ||x||^2`` for this codec — the factor the
+        online rho tracker (``fl.server.measure_rho``) divides out of the
+        r_exact denominator. 1.0 for codecs whose per-client reconstruction
+        does not inflate norms (identity, top_k, ...); the unbiased
+        sparsifying families override with their exact second-moment factor.
+        """
+        return 1.0
+
     def replace(self, **kw) -> "Sparsifier":
         return dataclasses.replace(self, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
 class RandK(Sparsifier):
-    """Rand-k sparsification (Konecny & Richtarik 2018); indices key-derived."""
+    """Rand-k sparsification (Konecny & Richtarik 2018); indices key-derived.
+
+    ``chunk_budgets`` (rand_k only) turns the uniform per-chunk budget k into
+    an explicit per-chunk allocation ``(k_0, ..., k_{C-1})`` — the adaptive-
+    budget mechanism (``fl.rounds`` derives it each round from per-chunk norm
+    mass). The payload becomes ONE flat value row of ``sum(chunk_budgets)``
+    entries; decode scales chunk c by ``d_block / k_c``, so each chunk's
+    estimate stays exactly unbiased at its own budget. The allocator
+    (``codec.adaptive_chunk_budgets``) conserves ``sum(k_c) == C * k``, so
+    wire bytes are a pure reallocation, never a reduction.
+    """
 
     name: ClassVar[str] = "rand_k"
     k: int = 64
     d_block: int = 1024
     shared_randomness: bool = True
+    chunk_budgets: tuple | None = None  # per-chunk (k_0..k_{C-1}); rand_k only
+
+    def __post_init__(self):
+        cb = self.chunk_budgets
+        if cb is None:
+            return
+        if type(self).name != "rand_k":
+            raise ValueError(
+                f"chunk_budgets is rand_k-only (the {type(self).name!r} "
+                "decode transforms assume one uniform per-chunk budget); "
+                "got chunk_budgets on it"
+            )
+        cb = tuple(int(b) for b in cb)
+        if not cb or any(b < 1 or b > self.d_block for b in cb):
+            raise ValueError(
+                f"chunk_budgets must be non-empty with every entry in "
+                f"[1, d_block={self.d_block}], got {cb}"
+            )
+        object.__setattr__(self, "chunk_budgets", cb)
 
     def payload_schema(self, n_chunks: int) -> tuple:
+        if self.chunk_budgets is not None:
+            if len(self.chunk_budgets) != n_chunks:
+                raise ValueError(
+                    f"chunk_budgets has {len(self.chunk_budgets)} entries but "
+                    f"the vector has {n_chunks} chunks"
+                )
+            return (ArraySpec("vals", (sum(self.chunk_budgets),), "float32",
+                              VALUES),)
         return (ArraySpec("vals", (n_chunks, self.k), "float32", VALUES),)
+
+    @property
+    def self_decode_norm_inflation(self) -> float:
+        # E||(d/k) scatter_k(x)||^2 = (d/k) ||x||^2 per chunk. Under adaptive
+        # chunk_budgets the factor is sum_c (d/k_c) ||x_c||^2 / ||x||^2; with
+        # the proportional-to-mass allocation that produces the budgets
+        # (k_c ∝ ||x_c||^2, sum k_c = C k) this collapses back to d/k exactly,
+        # so the nominal budget stays the right de-inflation.
+        return self.d_block / self.k
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,6 +236,25 @@ class SparseProj(Sparsifier):
         """Analytic per-chunk encode flop model: one multiply + one add per
         stored entry, plus the row scale. Strictly decreasing in ``s``."""
         return int(self.k * (2 * self.nnz + 1))
+
+    @property
+    def self_decode_norm_inflation(self) -> float:
+        """Exact second moment of the with-replacement very-sparse decode:
+
+            E||(d/k) G^T G x||^2 = (d/k) * F * ||x||^2,
+            F = 1 + (k-1)/d + 2(nnz-1)/(nnz*d)
+
+        Unlike the SRHT family (G G^T = I_k, factor exactly d/k), the rows
+        g = (1/sqrt(nnz)) sum_t sigma_t e_{c_t} are drawn with replacement:
+        E||g||^4 = 1 + 2(nnz-1)/(nnz*d) (duplicate-column fourth-moment term)
+        and the k rows are independent rather than orthogonal, adding the
+        (k-1)/d cross-row term. Limits check out: nnz=1 gives the exact
+        subsample factor 1 + (k-1)/d on top of d/k, and F -> 1 as the rows
+        orthogonalise (d -> inf). MC-verified in tests/test_properties.py.
+        """
+        d, k, nnz = self.d_block, self.k, self.nnz
+        f = 1.0 + (k - 1.0) / d + 2.0 * (nnz - 1.0) / (nnz * d)
+        return (d / k) * f
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,6 +1,6 @@
 """Stage protocol + client-held state for the codec pipeline.
 
-A ``Stage`` is one orthogonal link in a compression pipeline. Four roles
+A ``Stage`` is one orthogonal link in a compression pipeline. Five roles
 exist; a ``Pipeline`` validates at most one of each except quantizers, which
 it validates to at most one as well (stacked quantization is not a thing we
 model):
@@ -11,6 +11,9 @@ model):
     feedback  — error-feedback residual carried in ClientState.ef
     temporal  — temporal side information (client-held memory, after
                 Rand-k-Temporal, Jhunjhunwala et al. 2021)
+    code      — entropy-coded wire accounting (codec.entropy.EntropyCode):
+                arrays stay raw on device, the ledger charges the EXACT
+                coded stream length
 
 The stage hooks are ``encode`` / ``decode`` / ``self_decode`` (dataflow,
 defined per role — see sparsifiers/quantizers) and ``client_state`` (the

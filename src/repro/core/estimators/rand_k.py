@@ -32,8 +32,62 @@ def _indices(spec, key, client_id, n_chunks: int,
     return jax.vmap(lambda kk: jax.random.permutation(kk, d)[:k])(keys)
 
 
+def _budget_offsets(budgets):
+    offs = [0]
+    for b in budgets:
+        offs.append(offs[-1] + b)
+    return offs
+
+
+def _budgeted_indices(spec, key, client_id, n_chunks: int):
+    """Per-chunk index arrays ``[(k_0,), ..., (k_{C-1},)]`` for adaptive
+    ``chunk_budgets`` — chunk c takes the first k_c entries of the (shared or
+    chunk-keyed) permutation, so the draw at budget k_c is exactly the
+    uniform-budget draw truncated/extended (same permutation prefix)."""
+    budgets = spec.chunk_budgets
+    if len(budgets) != n_chunks:
+        raise ValueError(
+            f"chunk_budgets has {len(budgets)} entries but the vector has "
+            f"{n_chunks} chunks"
+        )
+    ckey = base.client_key(key, client_id)
+    d = spec.d_block
+    if spec.shared_randomness:
+        perm = jax.random.permutation(ckey, d)
+        return [perm[: budgets[ci]] for ci in range(n_chunks)]
+    return [
+        jax.random.permutation(base.chunk_key(ckey, ci), d)[: budgets[ci]]
+        for ci in range(n_chunks)
+    ]
+
+
+def _budgeted_scatter(spec, key, vals_flat, ids):
+    """(n, sum k_c) flat values -> (n, C, d) per-client unbiased estimates,
+    each chunk scaled by its OWN d/k_c."""
+    budgets = spec.chunk_budgets
+    c = len(budgets)
+    offs = _budget_offsets(budgets)
+    d = spec.d_block
+
+    def one(client_id, v):
+        idxs = _budgeted_indices(spec, key, client_id, c)
+        rows = [
+            (d / budgets[ci])
+            * jnp.zeros((d,), v.dtype).at[idxs[ci]].add(v[offs[ci]: offs[ci + 1]])
+            for ci in range(c)
+        ]
+        return jnp.stack(rows)
+
+    return jax.vmap(one)(ids, vals_flat)
+
+
 def encode(spec, key, client_id, x_cd):
     c = x_cd.shape[0]
+    if getattr(spec, "chunk_budgets", None) is not None:
+        idxs = _budgeted_indices(spec, key, client_id, c)
+        return {"vals": jnp.concatenate(
+            [x_cd[ci, idxs[ci]] for ci in range(c)]
+        )}
     idx = _indices(spec, key, client_id, c)
     vals = jnp.take_along_axis(x_cd, idx, axis=-1)
     return {"vals": vals}
@@ -62,6 +116,14 @@ def scatter_sum_and_counts(spec, key, vals, n, client_ids=None, chunk_offset=0):
 
 
 def decode(spec, key, payloads, n, client_ids=None, chunk_offset=0):
+    if getattr(spec, "chunk_budgets", None) is not None:
+        if chunk_offset:
+            raise ValueError(
+                "adaptive chunk_budgets decode is not shardable "
+                "(chunk_offset must be 0)"
+            )
+        ids = jnp.arange(n) if client_ids is None else jnp.asarray(client_ids)
+        return _budgeted_scatter(spec, key, payloads["vals"], ids).sum(0) / n
     s, _ = scatter_sum_and_counts(spec, key, payloads["vals"], n, client_ids,
                                   chunk_offset)
     return (spec.d_block / (spec.k * n)) * s
@@ -72,6 +134,9 @@ def self_decode(spec, key, client_id, payload):
     attributes to this client. Drives error feedback and the FL server's
     online correlation tracker (repro.fl.server)."""
     vals = payload["vals"]
+    if getattr(spec, "chunk_budgets", None) is not None:
+        ids = jnp.asarray(client_id)[None]
+        return _budgeted_scatter(spec, key, vals[None], ids)[0]
     c = vals.shape[0]
     idx = _indices(spec, key, client_id, c)
     s = jnp.zeros((c, spec.d_block), vals.dtype)

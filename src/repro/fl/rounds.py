@@ -10,7 +10,9 @@ One ``run_rounds`` call plays ``n_rounds`` of
        Rand-k-Temporal)                             (core.codec)
     4. every transmitted payload byte is ledgered straight off the payload's
        self-described schema                        (Konecny & Richtarik-style
-       accuracy-vs-communication accounting)
+       accuracy-vs-communication accounting); with a ``code`` stage the
+       parallel ``History.coded_bytes`` column ledgers the EXACT
+       entropy-coded stream length of the same traffic
     5. the server decodes the survivors' mean — renormalising by who actually
        reported, with their actual client ids, per budget group
     6. the server updates its correlation tracker and temporal state
@@ -64,7 +66,13 @@ import numpy as np
 
 from .. import obs
 from ..core import chunking, correlation
-from ..core.codec import ClientState, as_pipeline, with_staleness
+from ..core.codec import (
+    ClientState,
+    adaptive_chunk_budgets,
+    as_pipeline,
+    coded_payload_nbytes,
+    with_staleness,
+)
 from ..dist import collectives
 from . import server as server_lib
 from .clients import Cohort, Participation
@@ -87,6 +95,10 @@ class RoundConfig:
     overlap: bool = False       # double-buffered chunk streaming in the decode
     overlap_tile: int = 1       # chunks per stream tile
     ownership: bool = False     # sharded server decode (chunk ownership, §10)
+    # per-chunk adaptive budgets (docs/DESIGN.md §3.8): rewrite each round's
+    # chunk budget vector from the previous estimate's per-chunk norm mass
+    # (rand_k only, local backend, flat hierarchy, sync rounds)
+    adaptive_budgets: bool = False
     # logical owner shards on local/gspmd (0 = derive from the mesh); the
     # shard_map backend always uses the mesh client-axes extent (the
     # all_to_all routing must match the physical shards)
@@ -128,6 +140,12 @@ class History:
     mse: list = dataclasses.field(default_factory=list)      # vs survivors' true mean
     mse_pop: list = dataclasses.field(default_factory=list)  # vs ALL clients' mean
     bytes: list = dataclasses.field(default_factory=list)    # transmitted this round
+    # EXACT entropy-coded wire bytes of the same traffic: equal to ``bytes``
+    # when the pipeline carries no code stage; with codec.EntropyCode it is
+    # the summed length of every client's coded stream (stale arrivals are
+    # ledgered at raw size — the straggler's coded length belongs to ITS
+    # encode round, which already buffered the inputs, not the re-derivation)
+    coded_bytes: list = dataclasses.field(default_factory=list)
     n_survivors: list = dataclasses.field(default_factory=list)
     n_sampled: list = dataclasses.field(default_factory=list)
     n_stale: list = dataclasses.field(default_factory=list)  # late payloads admitted
@@ -150,6 +168,10 @@ class History:
         return int(np.sum(self.bytes))
 
     @property
+    def total_coded_bytes(self) -> int:
+        return int(np.sum(self.coded_bytes)) if self.coded_bytes else 0
+
+    @property
     def total_intra_pod_bytes(self) -> int:
         return int(np.sum(self.intra_pod_bytes)) if self.intra_pod_bytes else 0
 
@@ -161,17 +183,21 @@ class History:
     def total_stale_bytes(self) -> int:
         return int(np.sum(self.stale_bytes)) if self.stale_bytes else 0
 
-    def bytes_to_target(self, target: float, key: str = "metric") -> int | None:
-        """Cumulative bytes when the metric first reaches <= target."""
-        vals, cum = getattr(self, key), np.cumsum(self.bytes)
+    def bytes_to_target(self, target: float, key: str = "metric",
+                        bytes_key: str = "bytes") -> int | None:
+        """Cumulative bytes when the metric first reaches <= target.
+
+        ``bytes_key="coded_bytes"`` accumulates the entropy-coded ledger
+        instead of the raw schema bytes."""
+        vals, cum = getattr(self, key), np.cumsum(getattr(self, bytes_key))
         for v, b in zip(vals, cum):
             if v is not None and not np.isnan(v) and v <= target:
                 return int(b)
         return None
 
-    _RECORD_KEYS = ("metric", "mse", "mse_pop", "bytes", "n_survivors",
-                    "n_sampled", "n_stale", "stale_bytes", "intra_pod_bytes",
-                    "dcn_bytes", "rho_hat")
+    _RECORD_KEYS = ("metric", "mse", "mse_pop", "bytes", "coded_bytes",
+                    "n_survivors", "n_sampled", "n_stale", "stale_bytes",
+                    "intra_pod_bytes", "dcn_bytes", "rho_hat")
 
     def round_records(self) -> list:
         """The trajectory as one dict per round (the ``--metrics-json``
@@ -347,10 +373,12 @@ def _group_dist(pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate, cfg):
     return mean_g, cstate, info["bytes_sent"], info["intra_pod_bytes"], delta
 
 
-def _measure_rho_dist(pipe_g, key, delta, ids_g, cstate):
-    """The collectives paths keep payloads internal, so the tracker re-derives
-    them (same key/ids/side/residual => identical payloads). Costs one extra
-    encode of the group's survivors — payload-sized, server-side."""
+def _rederive_payloads(pipe_g, key, delta, ids_g, cstate):
+    """Re-derive the group's transmitted payloads server-side (same key / ids
+    / side / residual => identical payloads — encode is deterministic in
+    them). Costs one extra encode of the group's survivors, payload-sized.
+    Used where the payload stack never materialised: the collectives paths,
+    the overlapped local path, and the coded-bytes ledger."""
     ids_j = jnp.asarray(ids_g)
     enc_in = delta[ids_g]
     if pipe_g.has_ef and cstate is not None and cstate.ef is not None:
@@ -358,6 +386,11 @@ def _measure_rho_dist(pipe_g, key, delta, ids_g, cstate):
         # before encoding), so the re-derived payloads match what was sent.
         enc_in = enc_in + cstate.ef[ids_j]
     payloads, _ = pipe_g.encode_all(key, enc_in, client_ids=ids_j)
+    return payloads
+
+
+def _measure_rho_dist(pipe_g, key, delta, ids_g, cstate):
+    payloads = _rederive_payloads(pipe_g, key, delta, ids_g, cstate)
     return server_lib.measure_rho(pipe_g, key, payloads, ids_g)
 
 
@@ -377,7 +410,11 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate,
                   side, mem_snapshot):
     """Budget-grouped encode/decode over the survivors on any backend.
 
-    Returns (mean_chunks, bytes_sent, intra_pod, rho_round, cstate)."""
+    Returns (mean_chunks, bytes_sent, coded_sent, intra_pod, rho_round,
+    cstate). ``coded_sent`` is the exact entropy-coded wire ledger of the
+    same payloads — equal to ``bytes_sent`` when the pipeline carries no
+    code stage; otherwise the summed per-client coded stream lengths
+    (re-derived server-side where the payload stack never materialised)."""
     groups = cohort.budget_groups(part.survivors, pipe.k)
     track = _should_track(pipe, cfg)
     n_eff = part.n_survivors
@@ -387,8 +424,17 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate,
         plan = collectives.ownership_plan(
             _ownership_arg(cfg), n_chunks, max(1, cfg.n_owners)
         )
+    # per-chunk adaptive budgets: the previous estimate's per-chunk norm mass
+    # sets this round's budget vector (round 0 has no estimate => uniform,
+    # i.e. chunk_budgets stays unset)
+    chunk_mass = None
+    if cfg.adaptive_budgets and state_srv.prev_mean is not None:
+        chunk_mass = np.asarray(
+            jnp.sum(jnp.square(state_srv.prev_mean), axis=-1)
+        )
 
-    mean_chunks, bytes_sent, intra_pod, rho_parts = None, 0, 0, []
+    mean_chunks, bytes_sent, coded_sent, intra_pod, rho_parts = (
+        None, 0, 0, 0, [])
     for k_g, ids_g in groups:
         if len(ids_g) == 0:
             continue
@@ -396,22 +442,37 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate,
         pipe_g = server_lib.resolve_pipeline(
             pipe.with_budget(k_g), state_srv, len(ids_g)
         )
+        if chunk_mass is not None:
+            pipe_g = pipe_g.replace_sparsifier(
+                chunk_budgets=adaptive_chunk_budgets(
+                    chunk_mass, k_g, pipe.d_block)
+            )
         if cfg.backend == "local":
             dec, cstate, payloads = _group_local(
                 pipe_g, key, xs_chunks, ids_g, side, mem_snapshot, cstate,
                 overlap=cfg.overlap, overlap_tile=cfg.overlap_tile, plan=plan,
             )
-            bytes_sent += pipe_g.payload_nbytes(n_chunks) * len(ids_g)
+            raw_g = pipe_g.payload_nbytes(n_chunks) * len(ids_g)
+            bytes_sent += raw_g
             intra_pod += collectives.intra_pod_traffic(
                 pipe_g, len(ids_g), n_chunks,
                 plan.n_shards if plan is not None else 1, plan=plan,
             )["intra_pod_bytes"]
+            delta = None
+            if payloads is None and (track or pipe_g.code_stage is not None):
+                # overlapped path: payloads stayed tile-local; re-derive
+                delta = xs_chunks if side is None else xs_chunks - side[None]
+            if pipe_g.code_stage is None:
+                coded_sent += raw_g
+            else:
+                pl = payloads if payloads is not None else _rederive_payloads(
+                    pipe_g, key, delta, ids_g, pre_state)
+                coded_sent += coded_payload_nbytes(pipe_g, pl)
             if not track:
                 rho_g = None
             elif payloads is not None:
                 rho_g = server_lib.measure_rho(pipe_g, key, payloads, ids_g)
-            else:  # overlapped path: payloads stayed tile-local; re-derive
-                delta = xs_chunks if side is None else xs_chunks - side[None]
+            else:
                 rho_g = _measure_rho_dist(pipe_g, key, delta, ids_g, pre_state)
         elif cfg.backend in ("gspmd", "shard_map"):
             dec, cstate, nbytes_g, intra_g, delta = _group_dist(
@@ -419,6 +480,13 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate,
             )
             bytes_sent += nbytes_g
             intra_pod += intra_g
+            if pipe_g.code_stage is None:
+                coded_sent += nbytes_g
+            else:
+                coded_sent += coded_payload_nbytes(
+                    pipe_g,
+                    _rederive_payloads(pipe_g, key, delta, ids_g, pre_state),
+                )
             rho_g = (
                 _measure_rho_dist(pipe_g, key, delta, ids_g, pre_state)
                 if track else None
@@ -437,7 +505,7 @@ def _decode_round(pipe, key, xs_chunks, part, cohort, state_srv, cfg, cstate,
         wsum = sum(w for _, w in rho_parts)
         rho_round = sum(r * w for r, w in rho_parts) / wsum
         server_lib.ema_update(state_srv, rho_round, gamma=cfg.r_gamma)
-    return mean_chunks, bytes_sent, intra_pod, rho_round, cstate
+    return mean_chunks, bytes_sent, coded_sent, intra_pod, rho_round, cstate
 
 
 def _stale_arrival_bytes(pipe, buf: _StaleBuffer, cohort, n_chunks: int) -> int:
@@ -507,8 +575,8 @@ def _hier_round(pipe, rkey, xs_chunks, part, cohort, hier, cfg, cstate, side,
     its owned pods; after ``exchange`` all processes hold identical records
     and reduce them identically — there is no root process.
 
-    Returns (mean_chunks, nbytes, intra_pod, dcn_info, rho_round, cstate,
-    n_stale).
+    Returns (mean_chunks, nbytes, coded, intra_pod, dcn_info, rho_round,
+    cstate, n_stale).
     """
     from ..runtime import comms as comms_lib
     from ..runtime import hierarchy as hier_lib
@@ -522,18 +590,18 @@ def _hier_round(pipe, rkey, xs_chunks, part, cohort, hier, cfg, cstate, side,
     for p in hier.owned_pods:
         part_p = Participation(sampled=plan.restrict(part.sampled, p),
                                survivors=plan.restrict(part.survivors, p))
-        rec = {"n": part_p.n_survivors, "mean": None, "bytes": 0, "intra": 0,
-               "rho": None, "n_admit": 0, "stale_mean": None}
+        rec = {"n": part_p.n_survivors, "mean": None, "bytes": 0, "coded": 0,
+               "intra": 0, "rho": None, "n_admit": 0, "stale_mean": None}
         if part_p.n_survivors:
             with obs.span("fl", f"pod{p}", track=f"pod{p}", pod=p,
                           survivors=part_p.n_survivors):
-                dec, nb, intra, rho_p, cstate = _decode_round(
+                dec, nb, coded_p, intra, rho_p, cstate = _decode_round(
                     pipe, rkey, xs_chunks, part_p, cohort,
                     hier.pod_states[p], cfg, cstate, side, mem_snapshot,
                 )
             obs.count("runtime", "pod.decodes", pod=p)
-            rec.update(mean=np.asarray(dec), bytes=int(nb), intra=int(intra),
-                       rho=rho_p)
+            rec.update(mean=np.asarray(dec), bytes=int(nb),
+                       coded=int(coded_p), intra=int(intra), rho=rho_p)
         admit_p = plan.restrict(admit, p)
         if len(admit_p):
             stale_p = _decode_stale(pipe, stale_buf, admit_p, cohort,
@@ -554,6 +622,9 @@ def _hier_round(pipe, rkey, xs_chunks, part, cohort, hier, cfg, cstate, side,
     mean_np, _, _ = hier_lib.combine_records(records)
     mean_chunks = jnp.asarray(mean_np)
     nbytes = sum(r["bytes"] for r in records.values())
+    # older runtime processes may exchange records without the coded ledger;
+    # a pod record lacking it is ledgered at raw (code stage absent there)
+    coded = sum(r.get("coded", r["bytes"]) for r in records.values())
     intra = sum(r["intra"] for r in records.values())
     rho_round = hier_lib.combine_rho(records)
 
@@ -571,7 +642,8 @@ def _hier_round(pipe, rkey, xs_chunks, part, cohort, hier, cfg, cstate, side,
             mean_chunks, part.n_survivors, jnp.asarray(stale_np), n_stale,
             cfg.stale_weight,
         )
-    return mean_chunks, nbytes, intra, dcn_info, rho_round, cstate, n_stale
+    return (mean_chunks, nbytes, coded, intra, dcn_info, rho_round, cstate,
+            n_stale)
 
 
 def _advance_straggler_state(pipe, key, xs_chunks, stragglers, cohort, cstate):
@@ -622,6 +694,31 @@ def _validate_cfg(pipe, cfg):
         collectives.check_shardable(pipe)
         if cfg.n_owners < 0:
             raise ValueError(f"n_owners must be >= 0, got {cfg.n_owners}")
+    if cfg.adaptive_budgets:
+        if getattr(pipe.sparsifier, "name", None) != "rand_k":
+            raise ValueError(
+                "adaptive_budgets rewrites rand_k's chunk_budgets vector; "
+                f"the {getattr(pipe.sparsifier, 'name', '?')!r} sparsifier "
+                "has no per-chunk budget mechanism"
+            )
+        if cfg.backend != "local" or cfg.hierarchy != "flat":
+            raise ValueError(
+                "adaptive_budgets requires backend='local' and "
+                "hierarchy='flat': the per-round budget vector depends on "
+                "the server's previous estimate, which the dist/hier routes "
+                "do not rebroadcast to the encode side"
+            )
+        if cfg.async_rounds:
+            raise ValueError(
+                "adaptive_budgets does not compose with async rounds: a "
+                "stale payload was encoded under the PREVIOUS round's budget "
+                "vector, which the admitting round no longer holds"
+            )
+        if cfg.overlap or cfg.ownership:
+            raise ValueError(
+                "adaptive_budgets packs one flat value row per client "
+                "(non-streamable, non-shardable); drop overlap/ownership"
+            )
     if cfg.hierarchy not in ("flat", "hier"):
         raise ValueError(f"hierarchy must be 'flat' or 'hier', got "
                          f"{cfg.hierarchy!r}")
@@ -692,14 +789,15 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
         side, mem_snapshot = _side_and_memory(pipe, cfg, state_srv, cstate)
 
         if hier is not None:
-            (mean_chunks, nbytes, intra_pod, dcn_info, rho_round, cstate,
-             n_stale) = _hier_round(
+            (mean_chunks, nbytes, coded, intra_pod, dcn_info, rho_round,
+             cstate, n_stale) = _hier_round(
                 pipe, rkey, xs_chunks, part, cohort, hier, cfg, cstate,
                 side, mem_snapshot, stale_buf, n_chunks,
             )
             dcn = dcn_info["dcn_bytes"]
         else:
-            mean_chunks, nbytes, intra_pod, rho_round, cstate = _decode_round(
+            (mean_chunks, nbytes, coded, intra_pod, rho_round,
+             cstate) = _decode_round(
                 pipe, rkey, xs_chunks, part, cohort, state_srv, cfg, cstate,
                 side, mem_snapshot,
             )
@@ -726,6 +824,9 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
                 stale_nbytes = _stale_arrival_bytes(pipe, stale_buf, cohort,
                                                     n_chunks)
                 nbytes += stale_nbytes
+                # stale arrivals enter the coded ledger at raw size (see the
+                # History.coded_bytes comment)
+                coded += stale_nbytes
                 if hier is None:
                     admit = np.setdiff1d(stale_buf.ids, part.survivors)
                     if len(admit):
@@ -771,6 +872,7 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
             float(correlation.mse(mean_chunks, jnp.mean(xs_chunks, axis=0)))
         )
         hist.bytes.append(int(nbytes))
+        hist.coded_bytes.append(int(coded))
         hist.n_survivors.append(part.n_survivors)
         hist.n_sampled.append(part.n_sampled)
         hist.n_stale.append(n_stale)
@@ -789,6 +891,11 @@ def run_rounds(task: Task, spec, cohort: Cohort | None = None,
         )
         rsp["mse"] = hist.mse[-1]
         rsp["wire_bytes"] = nbytes
+        # coded ledger rides the round summary under its own key so the
+        # trace's exact ``bytes`` sum (client_encode/stale_admission only)
+        # stays untouched; tools/trace_report.py cross-checks it against
+        # metadata.ledger_coded_bytes when present
+        rsp["bytes_coded"] = int(coded)
         rsp["survivors"] = part.n_survivors
         round_span.__exit__(None, None, None)
 

@@ -111,8 +111,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "matrix-free kernel fast path (docs/KERNELS.md); "
                          "no-op for estimators without a fused decode")
     ap.add_argument("--payload-dtype", default="float32",
-                    choices=["float32", "bfloat16", "int8"],
-                    help="quantizer stage appended to the pipeline")
+                    choices=["float32", "bfloat16", "int8", "correlated"],
+                    help="quantizer stage appended to the pipeline "
+                         "(correlated = anti-correlated int8 rounding offsets "
+                         "from the shared round key; same wire bytes as int8)")
+    ap.add_argument("--entropy-code", dest="entropy_code", action="store_true",
+                    help="append the EntropyCode stage: the parallel "
+                         "History.coded_bytes ledger charges the EXACT "
+                         "entropy-coded stream length of each payload")
+    ap.add_argument("--adaptive-budgets", dest="adaptive_budgets",
+                    action="store_true",
+                    help="rand_k only: rewrite each round's per-chunk budget "
+                         "vector from the previous estimate's per-chunk norm "
+                         "mass (docs/DESIGN.md §3.8)")
     ap.add_argument("--backend", default="local",
                     choices=["local", "gspmd", "shard_map"],
                     help="round execution backend (docs/API.md backend matrix)")
@@ -192,6 +203,7 @@ def run_one(task, args, name, est_kw, ctx=None):
         payload_dtype=getattr(args, "payload_dtype", "float32"),
         ef=getattr(args, "ef", False),
         temporal=getattr(args, "client_temporal", False),
+        entropy_code=getattr(args, "entropy_code", False),
         **est_kw,
     )
     cohort = Cohort(n_clients=task.n_clients, participation=args.participation,
@@ -214,6 +226,7 @@ def run_one(task, args, name, est_kw, ctx=None):
         hierarchy="hier" if getattr(args, "pods", 1) > 1 else "flat",
         pods=getattr(args, "pods", 1),
         runtime=ctx,
+        adaptive_budgets=getattr(args, "adaptive_budgets", False),
     )
     state, hist = rounds_lib.run_rounds(task, spec, cohort, cfg)
     return spec, state, hist
@@ -233,9 +246,12 @@ def report(task, spec, hist, verbose=True):
     mean_mse = float(np.nanmean(hist.mse))
     final = ("" if task.metric is None
              else f"final_{task.metric_name}={hist.metric[-1]:.5f}  ")
+    coded = ("" if hist.total_coded_bytes == hist.total_bytes
+             else f"  coded_bytes={hist.total_coded_bytes}")
     print(f"{task.name:20s} {spec.name}({spec.transform or '-'})  k={spec.k} "
           f"d_block={spec.d_block}  rounds={len(hist.mse)}  "
-          f"{final}mean_mse={mean_mse:.6f}  total_bytes={hist.total_bytes}")
+          f"{final}mean_mse={mean_mse:.6f}  total_bytes={hist.total_bytes}"
+          f"{coded}")
     return mean_mse
 
 
@@ -266,6 +282,7 @@ def _run_meta(args, runs) -> dict:
         "seed": args.seed,
         "n_rounds": sum(len(h.mse) for _, h, _ in runs),
         "ledger_total_bytes": sum(h.total_bytes for _, h, _ in runs),
+        "ledger_coded_bytes": sum(h.total_coded_bytes for _, h, _ in runs),
         "ledger_stale_bytes": sum(h.total_stale_bytes for _, h, _ in runs),
         "ledger_intra_pod_bytes": sum(h.total_intra_pod_bytes
                                       for _, h, _ in runs),

@@ -10,10 +10,12 @@ legitimately sees (payloads and its own decode history):
    client i), apply ``core.correlation.r_exact`` to that decoded history, and
    track an EMA across rounds. The cross terms of r_exact are unbiased
    (independent per-client randomness), but compression noise inflates the
-   denominator Sum ||x_hat_i||^2 by exactly d/k for the Rand-k / SRHT family
-   (G G^T = I_k for SRHT rows, so E||G^T G x||^2 = (d/k) ||x||^2), so we
-   rescale by that known factor before the EMA. Residual ratio bias is small
-   and toward 0 — the tracker underclaims, never overclaims, correlation.
+   denominator Sum ||x_hat_i||^2 by each codec's known second-moment factor
+   (d/k for the Rand-k / SRHT family where G G^T = I_k; the density-corrected
+   (d/k)(1 + (k-1)/d + 2(nnz-1)/(nnz d)) for SparseProj's with-replacement
+   rows), declared by ``codec.Sparsifier.self_decode_norm_inflation`` and
+   rescaled out before the EMA. Residual ratio bias is small and toward 0 —
+   the tracker underclaims, never overclaims, correlation.
 
 2. **The practical Rand-Proj-Spatial(wavg) variant** — when true correlation
    is unavailable, ``transform="wavg"`` resolves per round to
@@ -125,12 +127,14 @@ def measure_rho(pipe, key, payloads, ids) -> float | None:
     recon = jax.vmap(
         lambda i, p: pipe.self_decode(key, i, p)
     )(id_arr, payloads)  # (n, C, d)
-    # de-inflate the denominator: E||self_decode||^2 = (d/k) ||x||^2 for the
-    # unbiased sparsifying family, = ||x||^2 for the identity baseline
-    scale = 1.0
-    if pipe.name in ("rand_k", "rand_k_spatial", "rand_proj_spatial",
-                     "sparse_proj"):
-        scale = pipe.d_block / pipe.k
+    # de-inflate the denominator by each codec's exact second-moment factor
+    # E||self_decode||^2 / ||x||^2: d/k for the Rand-k / SRHT family, the
+    # density-corrected (d/k)(1 + (k-1)/d + 2(nnz-1)/(nnz d)) for SparseProj's
+    # with-replacement rows, 1.0 for identity/top_k. The sparsifier declares
+    # it (codec.Sparsifier.self_decode_norm_inflation) — name-matching here
+    # once applied the orthonormal-row d/k to sparse_proj, biasing the wavg
+    # R-hat low by the density term.
+    scale = pipe.sparsifier.self_decode_norm_inflation
     r_round = float(correlation.r_exact(recon)) * scale
     return float(np.clip(r_round / (n - 1.0), 0.0, 1.0))
 

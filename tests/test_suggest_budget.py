@@ -60,6 +60,20 @@ def test_raises_named_error_when_bound_exceeds_dimension():
     assert isinstance(ei.value, ValueError)
 
 
+def test_infeasible_dimension_does_not_hint_a_fake_eps():
+    """When NO eps in (0, 1) fits (the bound at eps -> 1 still exceeds d),
+    the error must say so instead of hinting a loosen-eps threshold that
+    cannot work — the old message claimed '>= 0.999 suffices' here, which
+    was false."""
+    assert jl_min_k(10, 0.999) > 32  # the premise: even eps -> 1 needs k > d
+    with pytest.raises(codec.BudgetExceedsDimension) as ei:
+        codec.suggest_budget(10, 0.5, 32)
+    msg = str(ei.value)
+    assert "no eps in (0, 1) fits" in msg
+    assert "suffices" not in msg  # no fake actionable hint
+    assert "shrink the cohort" in msg
+
+
 @pytest.mark.parametrize("bad_eps", [0.0, 1.0, -0.1, 1.5])
 def test_rejects_out_of_range_eps(bad_eps):
     with pytest.raises(ValueError, match="eps"):

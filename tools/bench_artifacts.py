@@ -4,6 +4,7 @@
     python tools/bench_artifacts.py extract ownership  results/BENCH_smoke.json
     python tools/bench_artifacts.py extract kernels    results/BENCH_smoke.json
     python tools/bench_artifacts.py extract sparseproj results/BENCH_smoke.json
+    python tools/bench_artifacts.py extract quant      results/BENCH_smoke.json
     python tools/bench_artifacts.py validate results/*.json
 
 ``extract`` pulls one benchmark section out of a full BENCH artifact into
@@ -12,10 +13,12 @@ SPARSEPROJ_<mode>.json), carrying the parent's schema stamp and run metadata
 forward so a derived artifact is self-describing. Two extractions also
 enforce perf gates: ``kernels`` requires every ``kernel_fused/...​/fused``
 row to beat its ``/unfused`` sibling (a regression in kernels/srht_fused.py
-or its dispatch fails CI here first), and ``sparseproj`` requires the
+or its dispatch fails CI here first), ``sparseproj`` requires the
 SparseProj encode row to beat the SRHT encode row at equal budget in both
 wall-clock and declared flops — the cheap-encode claim, continuously
-measured.
+measured — and ``quant`` requires every correlated-quantization MSE row to
+strictly beat its int8 sibling at equal bytes AND every entropy-coded
+payload size to stay <= its raw schema size.
 
 ``validate`` is the upload gate: every artifact CI archives must carry
 ``schema_version`` (currently 1), the ``run`` metadata stamp
@@ -128,9 +131,49 @@ def extract_sparseproj(doc: dict, path: str) -> dict:
     return _derived(doc, rows)
 
 
+def extract_quant(doc: dict, path: str) -> dict:
+    """Correlated-quantization + entropy-coding gates. Every
+    ``quant/mse/.../correlated`` row must STRICTLY beat its ``/int8`` sibling
+    on the ``mean_mse`` derived field — the anti-correlated rounding claim at
+    identical wire bytes, continuously measured on the shared-support
+    (identity / full-vector DME) setting where the cancellation is realized.
+    Every ``quant/coded/`` row's exact entropy-coded stream length
+    (``coded_bytes``) must not exceed its raw schema size (``raw_bytes``) —
+    a coded payload that grew past its raw encoding fails the job."""
+    rows = [r for r in doc["rows"] if r["name"].startswith("quant/")]
+    if not rows:
+        _fail(f"{path}: bench_systems.quant produced no rows")
+    by_name = {r["name"]: r for r in rows}
+    gated = [n for n in by_name
+             if n.startswith("quant/mse/") and n.endswith("/correlated")]
+    if not gated:
+        _fail(f"{path}: no quant/mse/.../correlated row to gate on")
+    for name in gated:
+        sibling = name[: -len("/correlated")] + "/int8"
+        if sibling not in by_name:
+            _fail(f"{path}: missing int8 sibling for {name}")
+        corr = _derived_field(by_name[name], "mean_mse", path)
+        int8 = _derived_field(by_name[sibling], "mean_mse", path)
+        if corr >= int8:
+            _fail(f"correlated quantization regression: {name} "
+                  f"mean_mse={corr:.9f} >= {sibling} mean_mse={int8:.9f} "
+                  f"(anti-correlated rounding must win at equal bytes)")
+    coded_rows = [n for n in by_name if n.startswith("quant/coded/")]
+    if not coded_rows:
+        _fail(f"{path}: no quant/coded/ rows to gate on")
+    for name in coded_rows:
+        cb = _derived_field(by_name[name], "coded_bytes", path)
+        rb = _derived_field(by_name[name], "raw_bytes", path)
+        if cb > rb:
+            _fail(f"entropy-coded size exceeds raw schema size: {name} "
+                  f"coded_bytes={cb:.0f} > raw_bytes={rb:.0f}")
+    return _derived(doc, rows)
+
+
 _SECTIONS = {"ownership": (extract_ownership, "OWNERSHIP"),
              "kernels": (extract_kernels, "KERNELS"),
-             "sparseproj": (extract_sparseproj, "SPARSEPROJ")}
+             "sparseproj": (extract_sparseproj, "SPARSEPROJ"),
+             "quant": (extract_quant, "QUANT")}
 
 
 def main() -> None:

@@ -21,6 +21,11 @@ Asserts, against the Chrome-trace file the FL driver emitted
    client_encode and stale_admission events; payload_route's modelled
    traffic uses ``bytes_intra_pod`` and the round summary uses
    ``wire_bytes`` precisely so this sum stays honest.
+5. THE CODED-LEDGER INVARIANT (when ``metadata.ledger_coded_bytes`` is
+   present): the sum of ``args["bytes_coded"]`` over the round-summary
+   spans equals it exactly — the entropy-coded wire ledger
+   (History.coded_bytes) is annotated under its OWN key so it never
+   enters the raw-byte sum above.
 
 Exit code is non-zero on any violation, with a per-check report.
 """
@@ -107,6 +112,15 @@ def report(doc: dict) -> list[str]:
     elif int(traced) != int(ledger) or traced != int(traced):
         fails.append(f"byte-ledger mismatch: trace sums {traced}, "
                      f"History.total_bytes says {ledger}")
+
+    # the coded ledger, when traced, must match under its own key
+    ledger_coded = meta.get("ledger_coded_bytes")
+    if ledger_coded is not None:
+        coded = sum(e["args"]["bytes_coded"] for e in spans
+                    if "bytes_coded" in e["args"])
+        if int(coded) != int(ledger_coded) or coded != int(coded):
+            fails.append(f"coded-ledger mismatch: trace sums {coded}, "
+                         f"History.coded_bytes says {ledger_coded}")
 
     # bytes must ride only on the two wire-crossing tracks
     offenders = sorted({tracks.get(e["tid"], "?") for e in spans
